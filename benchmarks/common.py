@@ -1,0 +1,122 @@
+"""Shared benchmark utilities: calibrated tensor generators, the tiny-LM
+trainer used by the accuracy-proxy benchmarks, timing, CSV output."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "artifacts")
+
+
+def heavy_tailed(rng, shape, df=4.0, ch_sigma=0.8):
+    """LLM-like tensor: student-t entries + per-channel log-normal scales —
+    matches the outlier structure that drives MX quantization error
+    (paper Sec. 3.1)."""
+    t = rng.standard_t(df=df, size=shape).astype(np.float32)
+    ch = np.exp(ch_sigma * rng.standard_normal((1, shape[-1]))).astype(
+        np.float32)
+    return jnp.asarray(t * ch)
+
+
+def act_like(rng, shape):
+    """Activation-like: GELU-ish positively skewed with outlier channels."""
+    g = rng.standard_normal(shape).astype(np.float32)
+    out = np.where(g > 0, g, 0.05 * g)
+    hot = rng.choice(shape[-1], max(1, shape[-1] // 100), replace=False)
+    out[..., hot] *= 8.0
+    return jnp.asarray(out)
+
+
+def mse(a, b) -> float:
+    return float(jnp.mean((a.astype(jnp.float32) - b.astype(jnp.float32))
+                          ** 2))
+
+
+def time_call(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (jit-compiled fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Tiny LM for model-level accuracy benchmarks (Tbl. 2/3 proxy)
+# ---------------------------------------------------------------------------
+
+def tiny_cfg(quant="none", quant_format="m2xfp"):
+    from repro.models.config import ModelConfig
+    return ModelConfig(
+        name="tiny-llama", family="dense", n_layers=4, d_model=128,
+        n_heads=4, n_kv_heads=4, d_ff=384, vocab_size=256, quant=quant,
+        quant_format=quant_format, remat=False)
+
+
+def _data_cfg():
+    from repro.data.pipeline import DataConfig
+    return DataConfig(batch=16, seq=128, vocab=256, seed=7, motif_len=12,
+                      noise=0.05)
+
+
+@functools.lru_cache(maxsize=1)
+def trained_tiny_lm(steps: int = 300):
+    """Train (or load cached) the tiny LM on the synthetic motif stream.
+    Returns (params, eval_batches). Deterministic."""
+    from repro.checkpoint import latest_step, restore_state, save_state
+    from repro.data.pipeline import SyntheticLM
+    from repro.models.model import init_params, loss_fn
+    from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+    cfg = tiny_cfg()
+    data = SyntheticLM(_data_cfg())
+    ckdir = os.path.join(ART_DIR, "tiny_lm")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, dtype=jnp.float32)
+
+    if latest_step(ckdir) == steps:
+        params, _ = restore_state(ckdir, params, steps)
+    else:
+        opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps,
+                              weight_decay=0.01)
+        opt = adamw_init(params)
+
+        @jax.jit
+        def step(params, opt, batch):
+            loss, g = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch))(params)
+            params, opt, _ = adamw_update(params, g, opt, opt_cfg)
+            return params, opt, loss
+
+        for i in range(steps):
+            b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            params, opt, loss = step(params, opt, b)
+        save_state(ckdir, steps, params)
+
+    evals = [{k: jnp.asarray(v) for k, v in data.batch_at(10_000 + i).items()}
+             for i in range(4)]
+    return params, evals
+
+
+def eval_ppl(params, quant: str, fmt: str) -> float:
+    """Held-out perplexity of the tiny LM under W4A4 fake-quant ``fmt``."""
+    import dataclasses
+    from repro.models.model import loss_fn
+    cfg = tiny_cfg(quant=quant, quant_format=fmt)
+    _, evals = trained_tiny_lm()
+    f = jax.jit(lambda p, b: loss_fn(p, cfg, b))
+    losses = [float(f(params, b)) for b in evals]
+    return float(np.exp(np.mean(losses)))

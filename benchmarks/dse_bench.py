@@ -1,0 +1,58 @@
+"""Paper Figs. 6-7: encoding design-space exploration.
+
+Sweeps metadata strategies x subgroup sizes on heavy-tailed LLM-like
+tensors, reporting (EBW, MSE) points and checking the paper's Pareto
+claims:
+  Fig. 6 (fixed scale):  Elem-EM-top1 dominates at 4.5-4.75 EBW;
+                         top-1 ~= top-2; Sg-EE never competitive.
+  Fig. 7 (adaptive):     Sg-EM-2bit-adaptive overtakes Elem-EM.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import STRATEGIES, mxfp4_reference, run_strategy
+from .common import csv_row, heavy_tailed, mse, time_call
+
+FIXED = ["elem_em_top1", "elem_em_top2", "elem_ee", "sg_em_1bit",
+         "sg_em_2bit", "sg_ee_1bit", "sg_ee_2bit"]
+ADAPTIVE = ["elem_em_top1_adaptive", "sg_em_2bit_adaptive",
+            "sg_ee_2bit_adaptive"]
+SUBGROUPS = [4, 8, 16, 32]
+
+
+def run(check: bool = True) -> dict:
+    rng = np.random.default_rng(42)
+    x = heavy_tailed(rng, (512, 2048))
+    base_dq, base_ebw = mxfp4_reference(x)
+    results = {("mxfp4", 32): (base_ebw, mse(base_dq, x))}
+    for name in FIXED + ADAPTIVE:
+        for sg in SUBGROUPS:
+            dq, ebw = run_strategy(name, x, subgroup=sg)
+            results[(name, sg)] = (ebw, mse(dq, x))
+
+    get = lambda n, sg: results[(n, sg)][1]
+    derived = []
+    if check:
+        # Elem-EM dominates at EBW 4.5 under fixed scale (subgroup 8)
+        assert get("elem_em_top1", 8) < get("sg_em_2bit", 8)
+        assert get("elem_em_top1", 8) < get("sg_ee_2bit", 8)
+        # top-1 ~= top-2 at its own EBW point
+        assert abs(get("elem_em_top1", 8) - get("elem_em_top2", 8)) \
+            < 0.35 * get("elem_em_top1", 8)
+        # adaptive flips the ordering: Sg-EM-2bit-adaptive wins (Fig. 7)
+        assert get("sg_em_2bit_adaptive", 8) < get("elem_em_top1_adaptive", 8)
+        # overall ranking (paper 4.2.3)
+        assert get("sg_em_2bit_adaptive", 8) < get("elem_em_top1_adaptive", 8) \
+            <= get("elem_em_top1", 8) < get("sg_ee_2bit_adaptive", 8)
+        derived.append("paper_fig6_fig7_orderings=confirmed")
+
+    us = time_call(lambda: run_strategy("elem_em_top1", x, subgroup=8)[0])
+    csv_row("dse_fig6_fig7", us, ";".join(
+        [f"{n}@sg{sg}:ebw={results[(n, sg)][0]:.3f}:mse={results[(n, sg)][1]:.5f}"
+         for (n, sg) in sorted(results) if sg in (8,)] + derived))
+    return results
+
+
+if __name__ == "__main__":
+    run()

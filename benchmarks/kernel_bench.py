@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks.
+
+CPU wall-times of interpret-mode Pallas are not TPU-predictive, so this
+reports (a) wall time of the jitted *XLA emulation path* (the exact math
+the kernel implements) and (b) the structural bytes-moved ratios that the
+TPU kernel realizes (4.5 vs 16 bits/elem from HBM) — the quantity the
+roofline memory term depends on."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.quant import decode_serving_weight, pack_serving_weight
+from repro.core.m2xfp import quantize_act_m2xfp
+from .common import csv_row, time_call
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    m, k, n = 512, 2048, 2048
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.05)
+    wp = pack_serving_weight(w)
+
+    bf16_mm = jax.jit(lambda a, b: (a.astype(jnp.float32)
+                                    @ b.astype(jnp.float32)))
+    serve_mm = jax.jit(lambda a, p: a @ decode_serving_weight(p)
+                       .astype(jnp.float32))
+    quant = jax.jit(quantize_act_m2xfp)
+
+    t_base = time_call(bf16_mm, x, w)
+    t_serve = time_call(serve_mm, x, wp)
+    t_quant = time_call(quant, x)
+
+    packed_bytes = wp.codes.size + wp.scales.size + wp.meta.size
+    ratio = (w.size * 2) / packed_bytes          # bf16 vs packed residency
+    csv_row("kernel_dequant_matmul", t_serve,
+            f"bf16_matmul_us={t_base:.1f};hbm_weight_bytes_ratio={ratio:.3f}"
+            f";bits_per_elem={8 * packed_bytes / w.size:.2f}")
+    csv_row("kernel_online_quantize", t_quant,
+            f"tokens={m};features={k};bits_out=4.5")
+    return {"t_base": t_base, "t_serve": t_serve, "t_quant": t_quant,
+            "ratio": ratio}
+
+
+if __name__ == "__main__":
+    run()

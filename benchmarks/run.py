@@ -1,0 +1,36 @@
+"""Benchmark harness — one entry per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows; assertion checks validate the
+paper's claims (EXPERIMENTS.md records the outputs)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import ablations, accuracy_proxy, dse_bench, kernel_bench, \
+        perf_model
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in [
+        ("dse_fig6_fig7", dse_bench.run),
+        ("accuracy_proxy_tbl2_tbl3", accuracy_proxy.run),
+        ("m2_nvfp4_tbl6", ablations.run_m2_nvfp4),
+        ("scale_rules_tbl8", ablations.run_scale_rules),
+        ("bias_clamp_ablation", ablations.run_bias_clamp_ablation),
+        ("perf_energy_fig13", perf_model.run),
+        ("kernels", kernel_bench.run),
+    ]:
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,FAILED:{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Hillclimb helper: re-run one dry-run cell with current env levers and
+print the roofline terms (reads no stale JSON)."""
+import os, sys, json
+sys.argv, argv = sys.argv[:1], sys.argv[1:]
+arch, shape = argv[0], argv[1]
+label = argv[2] if len(argv) > 2 else "exp"
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+r = run_cell(arch, shape, multi_pod=False, save=False)
+if not r["ok"]:
+    print("FAIL", r["error"]); sys.exit(1)
+rt = r["roofline"]; m = r["memory"]; h = r["hlo_analysis"]
+out = {
+  "label": label, "arch": arch, "shape": shape,
+  "compute_ms": round(rt["compute_s"]*1e3, 2),
+  "memory_ms": round(rt["memory_s"]*1e3, 2),
+  "collective_ms": round(rt["collective_s"]*1e3, 2),
+  "dominant": rt["dominant"], "frac": round(rt["roofline_fraction"], 4),
+  "peak_gib": round(m["peak_per_device"]/2**30, 2),
+  "coll_kinds_gb": {k: round(v/1e9, 2) for k, v in h["per_kind_bytes"].items()},
+  "env": {k: v for k, v in os.environ.items() if k.startswith("REPRO_") and k != "REPRO_FAITHFUL_DOTS"},
+}
+print(json.dumps(out))
+with open(f"experiments/perf/{label}__{arch.replace('.','_')}__{shape}.json", "w") as f:
+    json.dump(r | {"label": label}, f, indent=1)

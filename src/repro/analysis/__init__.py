@@ -1,0 +1,1 @@
+# Dry-run analysis: HLO collective extraction + three-term roofline model.

@@ -1,0 +1,355 @@
+"""Loop-aware static analysis of partitioned HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits a ``while`` body ONCE,
+but every ``lax.scan`` (layers, pipeline microbatches, SSD chunks) compiles
+to a while loop — so both FLOPs and collective traffic would be undercounted
+by the trip count (56x for mixtral's layer scan). This module parses the
+post-SPMD-partitioner HLO, recovers loop trip counts from the loop
+conditions, and propagates multipliers through the call graph.
+
+Counted per executed instruction (x its computation's multiplier):
+  * FLOPs: dot ops — 2 * prod(output dims) * prod(contracting dims)
+    (dots inside fusion bodies included). Elementwise FLOPs are ignored;
+    on these models they are <1% of dot FLOPs and rooflines conventionally
+    use MAC FLOPs.
+  * HBM bytes: sum of operand + result bytes of *top-level* instructions
+    (fusion interiors excluded — they live in registers/VMEM). This is the
+    standard post-fusion traffic proxy.
+  * Collective wire bytes (per device), ring-algorithm estimates:
+      all-gather          out * (G-1)/G
+      reduce-scatter      out * (G-1)         (input traverses the ring)
+      all-reduce          2 * out * (G-1)/G
+      all-to-all          out * (G-1)/G
+      collective-permute  out
+    with G = replica-group size parsed from the instruction.
+
+Shapes in the partitioned module are per-device; multiply by chip count for
+global figures (the roofline formulas divide it straight back out).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["HloAnalysis", "analyze_hlo", "parse_bytes_of_shape"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# shape group: lazy up to the first ``<op>(`` token — handles tuple shapes
+# containing /*index=N*/ comments (no parens appear inside shape tokens)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=(%[\w.\-]+).*?body=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w.\-]+)")
+_COND_CALLS_RE = re.compile(
+    r"(?:true_computation|false_computation|branch_computations)="
+    r"\{?(%[\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_bytes_of_shape(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_TOKEN.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_TOKEN.search(shape_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    line: str
+
+
+def _parse_computations(text: str) -> dict:
+    comps: dict[str, list[_Instr]] = {}
+    current = None
+    for raw in text.splitlines():
+        if current is None:
+            m = _COMP_HDR.match(raw)
+            if m and "{" in raw:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if raw.strip() == "}" or raw.rstrip() == "}":
+            current = None
+            continue
+        m = _DEF_RE.match(raw)
+        if m:
+            comps[current].append(
+                _Instr(m.group(1), m.group(2), m.group(3), raw))
+    return comps
+
+
+def _entry_name(text: str) -> str:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                return m.group(1)
+    # fall back: first computation
+    return next(iter(_parse_computations(text)))
+
+
+def _trip_count(cond_instrs: list[_Instr]) -> int:
+    """Loop bound from the condition computation: the constant in the
+    iv < N compare (jax scans emit static bounds)."""
+    consts = []
+    for ins in cond_instrs:
+        consts += [int(c) for c in _CONST_RE.findall(ins.line)]
+    return max(consts) if consts else 1
+
+
+def _dot_flops(ins: _Instr, shapes: dict) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.shape):
+        out_elems *= d
+    m = _LHS_CONTRACT_RE.search(ins.line)
+    contract = 1
+    if m and m.group(1):
+        # operands: dot(%a, %b)
+        ops = re.findall(r"\((%[\w.\-]+),\s*(%[\w.\-]+)", ins.line)
+        if ops:
+            lhs_shape = shapes.get(ops[0][0], "")
+            dims = _shape_dims(lhs_shape)
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _scaled_bytes(shape_str: str, trips: int) -> float:
+    """Bytes of a tensor, de-rated when it is a loop-stacked buffer: inside
+    a body with trip count T, an operand whose LEADING dim equals T is the
+    scan xs/ys stack — each iteration only touches the 1/T slice (XLA
+    aliases the update in place on TPU)."""
+    b = parse_bytes_of_shape(shape_str)
+    if trips > 1:
+        dims = _shape_dims(shape_str)
+        if dims and dims[0] == trips:
+            return b / trips
+    return b
+
+
+def _instr_bytes(ins: _Instr, shapes: dict, trips: int = 1) -> float:
+    """Operand + result bytes of a top-level instruction (loop-aware).
+
+    dynamic-update-slice aliases its big operand in place: only the update
+    slice moves (read update + write slice). dynamic-slice likewise reads
+    only the slice. Charging full buffers would overcount scan machinery
+    by the trip count."""
+    operands = re.findall(r"(%[\w.\-]+)", ins.line.split("(", 1)[1])
+    if ins.op == "dynamic-update-slice":
+        upd = operands[1] if len(operands) > 1 else None
+        upd_bytes = parse_bytes_of_shape(shapes.get(upd, "")) if upd else 0.0
+        return 2.0 * upd_bytes
+    if ins.op == "dynamic-slice":
+        return 2.0 * parse_bytes_of_shape(ins.shape)
+    total = _scaled_bytes(ins.shape, trips)
+    for name in operands:
+        if name in shapes:
+            total += _scaled_bytes(shapes[name], trips)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def _collective_wire_bytes(kind: str, out_bytes: float, g: int) -> float:
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return out_bytes                      # collective-permute
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float                          # per-device dot FLOPs (loop-aware)
+    hbm_bytes: float                      # per-device traffic proxy
+    collective_bytes: float               # per-device wire bytes
+    per_kind_bytes: dict
+    per_kind_count: dict
+    loop_trips: dict                      # body name -> trip count
+    f32_mirror_bytes: float = 0.0         # CPU-backend artifact (see below)
+
+
+def analyze_hlo(text: str, default_group: int = 2) -> HloAnalysis:
+    comps = _parse_computations(text)
+    entry = _entry_name(text)
+
+    # shape tables per computation (params + defs)
+    shape_tables = {}
+    for cname, instrs in comps.items():
+        tbl = {}
+        for ins in instrs:
+            tbl[ins.name] = ins.shape
+        shape_tables[cname] = tbl
+
+    # call graph with multipliers
+    mult: dict[str, float] = defaultdict(float)
+    fusion_of: dict[str, str] = {}
+
+    def visit(cname: str, m: float):
+        if cname not in comps:
+            return
+        mult[cname] += m
+        for ins in comps[cname]:
+            w = _WHILE_RE.search(ins.line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                visit(cond, m * (trips + 1))
+                visit(body, m * trips)
+                continue
+            c = _CALLS_RE.search(ins.line)
+            if c and ins.op == "fusion":
+                fusion_of[c.group(1)] = cname
+                continue                  # fused body: flops only, below
+            for pat in (_CALLS_RE, _TO_APPLY_RE):
+                cc = pat.search(ins.line)
+                if cc and ins.op not in ("fusion",):
+                    visit(cc.group(1), m)
+            cond_c = _COND_CALLS_RE.search(ins.line)
+            if cond_c:
+                for sub in re.findall(r"%[\w.\-]+", cond_c.group(1)):
+                    visit(sub, m)
+
+    visit(entry, 1.0)
+
+    # fusions whose root is a dynamic-update-slice alias their big operand
+    # in place — identify them so only the incremental bytes are charged
+    dus_rooted = set()
+    for cname, instrs in comps.items():
+        if instrs and instrs[-1].op == "dynamic-update-slice":
+            dus_rooted.add(cname)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes = defaultdict(float)
+    coll_count = defaultdict(int)
+    trips_out = {}
+
+    # body name -> its own trip count (for stacked-operand de-rating)
+    body_trips = {}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            w = _WHILE_RE.search(ins.line)
+            if w:
+                body_trips[w.group(2)] = _trip_count(comps.get(w.group(1), []))
+
+    for cname, m in list(mult.items()):
+        if m <= 0 or cname not in comps:
+            continue
+        tbl = shape_tables[cname]
+        own_trips = body_trips.get(cname, 1)
+        for ins in comps[cname]:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, tbl)
+            if ins.op in ("parameter", "constant", "get-tuple-element",
+                          "tuple", "bitcast", "while", "conditional",
+                          "call", "after-all"):
+                # control flow / aliasing ops move no HBM bytes themselves;
+                # their bodies are traversed with their own multipliers
+                continue
+            b = _instr_bytes(ins, tbl, own_trips)
+            if ins.op == "fusion":
+                c = _CALLS_RE.search(ins.line)
+                if c and c.group(1) in dus_rooted:
+                    # in-place update fusion: subtract the aliased pair
+                    # (full buffer counted once as operand, once as output)
+                    big = _scaled_bytes(ins.shape, own_trips)
+                    b = max(b - 2.0 * big, big * 0.01)
+            hbm += m * b
+            kind = next((k for k in _COLLECTIVES if ins.op.startswith(k)), None)
+            if kind and not ins.op.endswith("-done"):
+                g = _group_size(ins.line, default_group)
+                coll_bytes[kind] += m * _collective_wire_bytes(
+                    kind, parse_bytes_of_shape(ins.shape), g)
+                coll_count[kind] += int(m)
+
+    # dots inside fusion bodies (flops only; bytes already at fusion level)
+    for fname, caller in fusion_of.items():
+        m = mult.get(caller, 0.0)
+        if m <= 0 or fname not in comps:
+            continue
+        tbl = shape_tables[fname]
+        for ins in comps[fname]:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, tbl)
+
+    # record loop trip counts for reporting
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            w = _WHILE_RE.search(ins.line)
+            if w:
+                trips_out[w.group(2)] = _trip_count(comps.get(w.group(1), []))
+
+    # CPU-backend artifact: XLA CPU legalizes bf16 dots by upcasting
+    # operands to f32; convert(slice(X)) -> slice(convert(X))
+    # canonicalization then hoists FULL f32 mirrors of bf16 loop buffers
+    # (e.g. the whole KV cache) out of scans. A TPU backend feeds bf16
+    # straight into the MXU, so these mirrors don't exist there. We sum
+    # large (>= 64 MiB) f32 convert-from-bf16 outputs so the dry-run can
+    # report a TPU-representative corrected peak.
+    mirror = 0.0
+    conv_re = re.compile(r"=\s*(f32\[[0-9,]+\][^ ]*)\s+convert\(")
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op != "convert":
+                continue
+            m = conv_re.search(ins.line)
+            if not m:
+                continue
+            sz = parse_bytes_of_shape(m.group(1))
+            if sz >= 64 * 2 ** 20:
+                mirror += sz
+
+    return HloAnalysis(
+        flops=flops, hbm_bytes=hbm,
+        collective_bytes=sum(coll_bytes.values()),
+        per_kind_bytes=dict(coll_bytes), per_kind_count=dict(coll_count),
+        loop_trips=trips_out, f32_mirror_bytes=mirror)

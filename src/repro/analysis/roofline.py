@@ -1,0 +1,81 @@
+"""Three-term roofline model over the dry-run artifacts (TPU v5e target).
+
+    compute    = HLO_FLOPs        / (chips * 197e12 FLOP/s)    [bf16 MXU]
+    memory     = HLO_bytes        / (chips * 819e9  B/s)       [HBM]
+    collective = collective_bytes / (chips * 50e9   B/s)       [ICI/link]
+
+HLO_* figures are global (= per-device loop-aware static analysis x chips;
+see hlo.py for why cost_analysis alone is insufficient). The bound time is
+max(terms) under perfect overlap; the dominant term is the optimization
+target of the perf loop (EXPERIMENTS.md §Perf).
+
+MODEL_FLOPS uses the 6·N·D training convention (2·N·D for forward-only
+serving; N = active params for MoE); the ratio MODEL_FLOPS / HLO_FLOPs
+exposes remat/redundant compute (ratio < 1 when the compiled program does
+extra work, > 1 only if the analyzer missed compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (~1 link budget per chip)
+
+__all__ = ["RooflineTerms", "roofline", "model_flops",
+           "PEAK_FLOPS", "HBM_BW", "LINK_BW"]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    chips: int
+    hlo_flops: float             # global
+    hlo_bytes: float             # global
+    collective_bytes: float      # global
+    model_flops: float
+    dominant: str = ""
+    useful_ratio: float = 0.0    # MODEL_FLOPS / HLO_FLOPs
+    roofline_fraction: float = 0.0
+
+    def finalize(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops / self.hlo_flops
+                             if self.hlo_flops else 0.0)
+        # fraction of ideal: useful-FLOPs time vs the bound time
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        bound = max(terms.values())
+        self.roofline_fraction = ideal / bound if bound > 0 else 0.0
+        return self
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(per_device_flops: float, per_device_bytes: float,
+             per_device_coll_bytes: float, chips: int,
+             model_flops_: float) -> RooflineTerms:
+    gf = per_device_flops * chips
+    gb = per_device_bytes * chips
+    gc = per_device_coll_bytes * chips
+    return RooflineTerms(
+        compute_s=gf / (chips * PEAK_FLOPS),
+        memory_s=gb / (chips * HBM_BW),
+        collective_s=gc / (chips * LINK_BW),
+        chips=chips, hlo_flops=gf, hlo_bytes=gb, collective_bytes=gc,
+        model_flops=model_flops_,
+    ).finalize()
+
+
+def model_flops(cfg, shape: dict) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), N = active params."""
+    n = cfg.active_params
+    if shape["kind"] == "train":
+        return 6.0 * n * shape["batch"] * shape["seq"]
+    if shape["kind"] == "prefill":
+        return 2.0 * n * shape["batch"] * shape["seq"]
+    return 2.0 * n * shape["batch"]          # decode: one token / sequence

@@ -1,0 +1,2 @@
+"""Assigned architecture configs (one module per arch) + registry."""
+from .registry import ARCHS, get_config, list_configs, smoke_config  # noqa: F401

@@ -1,0 +1,61 @@
+"""Assigned input-shape cells and ShapeDtypeStruct specs for the dry-run.
+
+Four shapes per LM arch (seq_len x global_batch):
+    train_4k    4,096 x 256    train_step
+    prefill_32k 32,768 x 32    prefill_step (forward, cache build)
+    decode_32k  32,768 x 128   serve_step (1 token, 32k cache)
+    long_500k   524,288 x 1    serve_step (1 token, 500k cache) — only for
+                               archs with sub-quadratic / bounded-cache
+                               decode (cfg.long_context_ok)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins — no
+device allocation; the FULL configs are exercised only via lower/compile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def applicable_shapes(cfg) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.long_context_ok:
+        out.append("long_500k")
+    return out
+
+
+def _tokens_spec(cfg, batch: int, seq: int) -> dict:
+    if cfg.input_mode == "embeddings":
+        return {"embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16)}
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """Specs for the *data* inputs of the step function of this cell."""
+    s = SHAPES[shape_name]
+    batch, seq = s["batch"], s["seq"]
+    if s["kind"] == "train":
+        spec = _tokens_spec(cfg, batch, seq)
+        spec["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        return spec
+    if s["kind"] == "prefill":
+        return _tokens_spec(cfg, batch, seq)
+    # decode: one new token against a seq-length cache
+    spec = _tokens_spec(cfg, batch, 1)
+    return spec
+
+
+def cache_specs(cfg, shape_name: str, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the decode caches (via eval_shape; no alloc)."""
+    from repro.models.model import init_caches
+    s = SHAPES[shape_name]
+    return jax.eval_shape(
+        lambda: init_caches(cfg, s["batch"], s["seq"], dtype=dtype))

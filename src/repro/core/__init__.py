@@ -1,0 +1,21 @@
+# The paper's primary contribution: the M2XFP metadata-augmented
+# microscaling format family, its baselines, and the encoding DSE.
+from .dtypes import (  # noqa: F401
+    FP4_E2M1, FP6_E2M3, FP8_E4M3, FP4_MAG_VALUES, FP6_MAG_VALUES,
+    FloatSpec, round_to_grid,
+)
+from .scaling import (  # noqa: F401
+    SCALE_RULES, e8m0_decode, e8m0_encode, shared_scale_exponent,
+)
+from .formats import (  # noqa: F401
+    quantize_fp4_fp16scale, quantize_mxfp4, quantize_nvfp4, quantize_smx4,
+)
+from .m2xfp import (  # noqa: F401
+    PackedM2XFP,
+    decode_act_m2xfp, decode_weight_m2xfp,
+    encode_act_m2xfp, encode_weight_m2xfp,
+    quantize_act_m2nvfp4, quantize_act_m2xfp,
+    quantize_weight_m2nvfp4, quantize_weight_m2xfp,
+)
+from .dse import STRATEGIES, Strategy, mxfp4_reference, run_strategy  # noqa: F401
+from .ebw import ebw, format_ebw  # noqa: F401

@@ -1,0 +1,204 @@
+"""Encoding design-space exploration (paper Sec. 4.1-4.2, Figs. 5-7).
+
+Unified subgroup-centric framework: a group of ``k`` elements with shared
+scale is divided into contiguous subgroups; metadata is spent either on the
+most critical element (Elem-*) or on the subgroup scale (Sg-*), as extra
+mantissa (EM, precision) or extra exponent (EE, range), under a *fixed*
+shared scale (floor rule from the block max) or an *adaptive* one (MSE search
+over exponent bias candidates E-1, E, E+1).
+
+Each strategy yields (EBW, dequantized tensor); benchmarks sweep subgroup
+sizes to trace the Pareto frontier of MSE vs EBW.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .dtypes import FP4_E2M1, FP6_E2M3, exp2int, round_to_grid
+from .ebw import ebw
+from .m2xfp import elem_em_dequant_with_scale, sg_em_dequant_with_scale
+from .packing import group_reshape, group_unreshape
+from .scaling import shared_scale_exponent
+
+__all__ = ["Strategy", "STRATEGIES", "run_strategy", "mxfp4_reference"]
+
+
+def _scales(xg: jax.Array, rule: str = "floor") -> jax.Array:
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    e = shared_scale_exponent(amax, rule)
+    return exp2int(e)
+
+
+def _subgroup(xg: jax.Array, subgroup: int) -> jax.Array:
+    g = xg.shape[-1]
+    return xg.reshape(*xg.shape[:-1], g // subgroup, subgroup)
+
+
+# --------------------------------------------------------------------------
+# Elem-EE: metadata as an exponent offset on the top-1 element
+# --------------------------------------------------------------------------
+
+def _elem_ee_dequant(xg, s, subgroup: int, bits: int = 2) -> jax.Array:
+    """Top-1 element gets candidates fp4 * 2^d, d in {0..2^bits-1}; the best
+    (by |error| vs the original) is kept. Range extension, no extra precision
+    — the paper's analysis (Sec. 4.2) predicts this cannot fix block-max
+    clipping error; included for DSE completeness."""
+    xs = xg / s
+    q4 = round_to_grid(xs, FP4_E2M1)
+    q4s = _subgroup(q4, subgroup)
+    xss = _subgroup(xs, subgroup)
+    top_idx = jnp.argmax(jnp.abs(q4s), axis=-1)
+    onehot = jax.nn.one_hot(top_idx, subgroup, dtype=xg.dtype)
+    x_top = jnp.take_along_axis(xss, top_idx[..., None], axis=-1)[..., 0]
+    best = jnp.take_along_axis(q4s, top_idx[..., None], axis=-1)[..., 0]
+    best_err = jnp.abs(best - x_top)
+    for d in range(1, 2 ** bits):
+        cand = round_to_grid(x_top / (2.0 ** d), FP4_E2M1) * (2.0 ** d)
+        err = jnp.abs(cand - x_top)
+        take = err < best_err
+        best = jnp.where(take, cand, best)
+        best_err = jnp.where(take, err, best_err)
+    bestb = jnp.broadcast_to(best[..., None], q4s.shape).reshape(q4.shape)
+    dq = jnp.where(onehot.reshape(q4.shape) > 0, bestb, q4)
+    return dq * s
+
+
+# --------------------------------------------------------------------------
+# Sg-EE: metadata as a subgroup exponent offset (SMX-style), fixed/adaptive
+# --------------------------------------------------------------------------
+
+def _sg_ee_dequant(xg, s, subgroup: int, bits: int = 1,
+                   adaptive: bool = False) -> jax.Array:
+    """Subgroup scale 2^(E - d), d in {0..2^bits-1}. Fixed mode derives d from
+    the subgroup max (largest downshift that avoids clipping); adaptive mode
+    MSE-searches d jointly with a group bias in {-1, 0, +1}."""
+    nd = 2 ** bits
+    xsub = _subgroup(xg, subgroup)
+
+    def best_for_scale(base_s):
+        best_err = jnp.full(xsub.shape[:-1], jnp.inf, dtype=jnp.float32)
+        best_dq = jnp.zeros_like(xsub)
+        for d in range(nd):
+            sd = base_s[..., None] * (2.0 ** -d)
+            dq = round_to_grid(xsub / sd, FP4_E2M1) * sd
+            err = jnp.sum((dq - xsub) ** 2, axis=-1)
+            take = err < best_err
+            best_err = jnp.where(take, err, best_err)
+            best_dq = jnp.where(take[..., None], dq, best_dq)
+        return best_err, best_dq
+
+    if not adaptive:
+        # fixed: pick d from the subgroup max (no search over the global E)
+        smax = jnp.max(jnp.abs(xsub), axis=-1, keepdims=True)
+        fits = [smax * (2.0 ** d) <= FP4_E2M1.max_value * s[..., None]
+                for d in range(nd)]
+        d_sel = jnp.zeros(smax.shape, jnp.float32)
+        for d in range(nd - 1, 0, -1):
+            d_sel = jnp.where(fits[d], float(d), d_sel)
+        sd = s[..., None] * exp2int(-d_sel.astype(jnp.int32))
+        dq = round_to_grid(xsub / sd, FP4_E2M1) * sd
+        return dq.reshape(xg.shape)
+
+    best_err = None
+    best_dq = None
+    for b in (-1, 0, 1):
+        err, dq = best_for_scale(s * (2.0 ** b))
+        gerr = jnp.sum(err, axis=-1, keepdims=True)
+        if best_err is None:
+            best_err, best_dq = gerr, dq
+        else:
+            take = gerr < best_err
+            best_err = jnp.where(take, gerr, best_err)
+            best_dq = jnp.where(take[..., None], dq, best_dq)
+    return best_dq.reshape(xg.shape)
+
+
+# --------------------------------------------------------------------------
+# Strategy registry
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """One point family in the metadata design space."""
+
+    name: str
+    meta_bits_per_subgroup: float
+    fn: Callable  # (xg, s, subgroup) -> dequantized (..., ng, group)
+
+    def ebw(self, group: int, subgroup: int) -> float:
+        return ebw(group, meta_bits=self.meta_bits_per_subgroup * (group // subgroup))
+
+
+def _adaptive_scale_wrap(base_fn, xg, s, subgroup):
+    """Adaptive shared scale for element-level strategies: MSE-search the
+    group exponent over {E-1, E, E+1} (metadata unchanged)."""
+    best_err, best_dq = None, None
+    for b in (-1, 0, 1):
+        dq = base_fn(xg, s * (2.0 ** b), subgroup)
+        err = jnp.sum((dq - xg) ** 2, axis=-1, keepdims=True)
+        if best_err is None:
+            best_err, best_dq = err, dq
+        else:
+            take = err < best_err
+            best_err = jnp.where(take, err, best_err)
+            best_dq = jnp.where(take, dq, best_dq)
+    return best_dq
+
+
+STRATEGIES: dict[str, Strategy] = {
+    # --- fixed shared scale (Fig. 6) ---
+    "elem_em_top1": Strategy(
+        "elem_em_top1", 2.0,
+        lambda xg, s, sg: elem_em_dequant_with_scale(xg, s, sg, n_top=1)),
+    "elem_em_top2": Strategy(
+        "elem_em_top2", 4.0,
+        lambda xg, s, sg: elem_em_dequant_with_scale(xg, s, sg, n_top=2)),
+    "elem_ee": Strategy(
+        "elem_ee", 2.0, lambda xg, s, sg: _elem_ee_dequant(xg, s, sg, bits=2)),
+    "sg_em_1bit": Strategy(
+        "sg_em_1bit", 1.0,
+        lambda xg, s, sg: sg_em_dequant_with_scale(xg, s, sg, bits=1, adaptive=False)),
+    "sg_em_2bit": Strategy(
+        "sg_em_2bit", 2.0,
+        lambda xg, s, sg: sg_em_dequant_with_scale(xg, s, sg, bits=2, adaptive=False)),
+    "sg_ee_1bit": Strategy(
+        "sg_ee_1bit", 1.0,
+        lambda xg, s, sg: _sg_ee_dequant(xg, s, sg, bits=1, adaptive=False)),
+    "sg_ee_2bit": Strategy(
+        "sg_ee_2bit", 2.0,
+        lambda xg, s, sg: _sg_ee_dequant(xg, s, sg, bits=2, adaptive=False)),
+    # --- adaptive shared scale (Fig. 7) ---
+    "elem_em_top1_adaptive": Strategy(
+        "elem_em_top1_adaptive", 2.0,
+        lambda xg, s, sg: _adaptive_scale_wrap(
+            lambda a, b, c: elem_em_dequant_with_scale(a, b, c, n_top=1),
+            xg, s, sg)),
+    "sg_em_2bit_adaptive": Strategy(
+        "sg_em_2bit_adaptive", 2.0,
+        lambda xg, s, sg: sg_em_dequant_with_scale(xg, s, sg, bits=2, adaptive=True)),
+    "sg_ee_2bit_adaptive": Strategy(
+        "sg_ee_2bit_adaptive", 2.0,
+        lambda xg, s, sg: _sg_ee_dequant(xg, s, sg, bits=2, adaptive=True)),
+}
+
+
+def run_strategy(name: str, x: jax.Array, group: int = 32,
+                 subgroup: int = 8, rule: str = "floor"):
+    """Apply a DSE strategy. Returns (dequantized, ebw)."""
+    strat = STRATEGIES[name]
+    xg = group_reshape(x.astype(jnp.float32), group)
+    s = _scales(xg, rule)
+    dq = strat.fn(xg, s, subgroup)
+    return group_unreshape(dq).astype(x.dtype), strat.ebw(group, subgroup)
+
+
+def mxfp4_reference(x: jax.Array, group: int = 32, rule: str = "floor"):
+    """Plain MXFP4 as the zero-metadata reference point (EBW 4.25)."""
+    xg = group_reshape(x.astype(jnp.float32), group)
+    s = _scales(xg, rule)
+    dq = round_to_grid(xg / s, FP4_E2M1) * s
+    return group_unreshape(dq).astype(x.dtype), ebw(group)

@@ -1,0 +1,108 @@
+"""Baseline MX-family quantizers (fake-quant: quantize -> dequantize).
+
+All operate group-wise along the last axis and return an f32 tensor of the
+same shape. These are the paper's comparison formats (Fig. 3, Tbl. 2/3):
+
+  fp4_fp16scale : group FP4 with an exact (FP16-precision) scale amax/6
+  mxfp4         : OCP MXFP4 — group 32, E8M0 shared scale (rule configurable)
+  nvfp4         : NVIDIA NVFP4 — group 16, FP8 E4M3 scale + f32 tensor scale
+  smx4          : Shared Microexponents (SMX4) — group 16, INT3 elements,
+                  1-bit micro-exponent per pair of elements
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .dtypes import FP4_E2M1, FP8_E4M3, exp2int, round_to_grid
+from .packing import group_reshape, group_unreshape
+from .scaling import shared_scale_exponent
+
+__all__ = [
+    "quantize_fp4_fp16scale", "quantize_mxfp4", "quantize_nvfp4",
+    "quantize_smx4", "mxfp4_components",
+]
+
+
+def _group_amax(xg: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+
+
+@partial(jax.jit, static_argnames=("group",))
+def quantize_fp4_fp16scale(x: jax.Array, group: int = 32) -> jax.Array:
+    """Group FP4 with a precise scale s = amax / 6 (the 'FP4' line of Fig. 3)."""
+    xg = group_reshape(x.astype(jnp.float32), group)
+    s = _group_amax(xg) / FP4_E2M1.max_value
+    s = jnp.where(s == 0, 1.0, s)
+    q = round_to_grid(xg / s, FP4_E2M1)
+    return group_unreshape(q * s).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("group", "rule"))
+def quantize_mxfp4(x: jax.Array, group: int = 32, rule: str = "floor") -> jax.Array:
+    """OCP MXFP4: E8M0 shared scale (default floor rule), FP4 E2M1 elements."""
+    xg = group_reshape(x.astype(jnp.float32), group)
+    e = shared_scale_exponent(_group_amax(xg), rule)
+    s = exp2int(e)
+    q = round_to_grid(xg / s, FP4_E2M1)
+    return group_unreshape(q * s).astype(x.dtype)
+
+
+def mxfp4_components(x: jax.Array, group: int = 32, rule: str = "floor"):
+    """MXFP4 split into (fp4_values_grouped, scale_exponent) — building block
+    for the M2XFP encoders. fp4 values are the *unscaled* grid values; the
+    dequantized tensor is fp4 * 2^E."""
+    xg = group_reshape(x.astype(jnp.float32), group)
+    e = shared_scale_exponent(_group_amax(xg), rule)
+    s = exp2int(e)
+    q = round_to_grid(xg / s, FP4_E2M1)
+    return q, e
+
+
+@partial(jax.jit, static_argnames=("group",))
+def quantize_nvfp4(x: jax.Array, group: int = 16) -> jax.Array:
+    """NVFP4: FP8 (E4M3) group scale + f32 per-tensor scale, FP4 elements.
+
+    Tensor scale maps the largest group-scale into E4M3 range:
+      t  = amax_tensor / (448 * 6)
+      s8 = RTNE_e4m3(amax_group / (6 t));  element scale = s8 * t
+    """
+    xf = x.astype(jnp.float32)
+    xg = group_reshape(xf, group)
+    amax_t = jnp.max(jnp.abs(xf))
+    t = amax_t / (FP8_E4M3.max_value * FP4_E2M1.max_value)
+    t = jnp.where(t == 0, 1.0, t)
+    s8 = round_to_grid(_group_amax(xg) / (FP4_E2M1.max_value * t), FP8_E4M3)
+    s = s8 * t
+    s = jnp.where(s == 0, 1.0, s)
+    q = round_to_grid(xg / s, FP4_E2M1)
+    return group_unreshape(q * s).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("group", "pair"))
+def quantize_smx4(x: jax.Array, group: int = 16, pair: int = 2) -> jax.Array:
+    """SMX4 (Shared Microexponents): two-level block floating point.
+
+    Group of 16 shares an 8-bit scale 2^E; each pair of neighbours shares a
+    1-bit micro-exponent b in {0, 1} selecting scale 2^(E-b). Elements are
+    symmetric INT3 (range [-3, 3]).  E is chosen so the group max maps to 3.
+    """
+    int3_max = 3.0
+    xg = group_reshape(x.astype(jnp.float32), group)
+    amax = _group_amax(xg)
+    safe = jnp.maximum(amax, 1e-30)
+    # ceil(log2(amax/3)) so amax/2^E <= 3 (no clipping of the block max).
+    e = jnp.ceil(jnp.log2(safe / int3_max))
+    e = jnp.where(amax == 0, 0.0, e)
+    s = exp2int(e.astype(jnp.int32))
+    # pairs: (..., n_groups, group) -> (..., n_groups, group/pair, pair)
+    xp = xg.reshape(*xg.shape[:-1], group // pair, pair)
+    pmax = jnp.max(jnp.abs(xp), axis=-1, keepdims=True)
+    # use the finer scale 2^(E-1) when the pair still fits into [-3, 3]
+    b = (pmax <= int3_max * s[..., None] / 2).astype(jnp.int32)
+    sp = s[..., None] * exp2int(-b)
+    q = jnp.clip(jnp.round(xp / sp), -int3_max, int3_max)
+    dq = (q * sp).reshape(xg.shape)
+    return group_unreshape(dq).astype(x.dtype)

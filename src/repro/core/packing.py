@@ -1,0 +1,65 @@
+"""Bit packing utilities for the M2XFP memory layout.
+
+Paper Sec. 5.2: per group of 32 elements, three separately-organized streams:
+  * 128-bit block of packed 4-bit element codes  -> u8[16]  (2 codes / byte)
+  * 8-bit shared scale (E8M0, biased)            -> u8[1]
+  * 8-bit metadata (4 subgroups x 2 bits)        -> u8[1]
+
+Element code layout (sign-magnitude): bit3 = sign, bits2..0 = E2M1 magnitude
+code. Low nibble = even index, high nibble = odd index.
+Metadata byte layout: subgroup j occupies bits (2j)..(2j+1), j = 0..3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "group_reshape", "group_unreshape", "pack_nibbles", "unpack_nibbles",
+    "pack_meta2", "unpack_meta2",
+]
+
+
+def group_reshape(x: jax.Array, group: int) -> jax.Array:
+    """(..., n) -> (..., n // group, group). n must divide evenly."""
+    n = x.shape[-1]
+    if n % group:
+        raise ValueError(f"last dim {n} not divisible by group {group}")
+    return x.reshape(*x.shape[:-1], n // group, group)
+
+
+def group_unreshape(x: jax.Array) -> jax.Array:
+    """(..., n_groups, group) -> (..., n)."""
+    return x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
+
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+    """int 4-bit codes (..., n) with n even -> u8 (..., n // 2)."""
+    c = codes.astype(jnp.uint8) & 0xF
+    lo = c[..., 0::2]
+    hi = c[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """u8 (..., n // 2) -> int32 4-bit codes (..., n)."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def pack_meta2(meta: jax.Array) -> jax.Array:
+    """2-bit fields (..., n_sub) with n_sub multiple of 4 -> u8 (..., n_sub // 4)."""
+    m = meta.astype(jnp.uint8) & 0x3
+    m4 = m.reshape(*m.shape[:-1], m.shape[-1] // 4, 4)
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    return jnp.sum(
+        m4.astype(jnp.uint32) << shifts.astype(jnp.uint32), axis=-1
+    ).astype(jnp.uint8)
+
+
+def unpack_meta2(packed: jax.Array, n_sub: int) -> jax.Array:
+    """u8 (..., n_sub // 4) -> int32 2-bit fields (..., n_sub)."""
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    fields = (packed[..., None] >> shifts) & 0x3
+    return fields.reshape(*packed.shape[:-1], n_sub).astype(jnp.int32)

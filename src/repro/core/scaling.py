@@ -1,0 +1,76 @@
+"""Shared-scale (E8M0) computation rules for MX-style quantization.
+
+The shared scale of a group is S = 2^E derived from the block maximum ``amax``.
+Five rules from the paper (Sec. 6.4, Tbl. 8):
+
+  floor : E = floor(log2(amax / P))          (OCP default; P = largest PoT, 4 for FP4)
+  ceil  : E = ceil (log2(amax / M))          (M = max representable, 6 for FP4)
+  rtn1  : E = round(log2(amax / M))
+  rtn2  : E = round(log2(amax / P))
+  rtne  : rounds amax in value space then floors; for FP4 (M = 1.5 P) this is
+          provably identical to ``ceil`` (paper Sec. 6.4), which is how we
+          implement it.
+
+E is clamped to the E8M0 range [-127, 127]. amax == 0 gives E = 0 (S = 1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .dtypes import FP4_E2M1, FloatSpec, exp2int, floor_log2
+
+__all__ = ["SCALE_RULES", "shared_scale_exponent", "e8m0_encode", "e8m0_decode"]
+
+SCALE_RULES = ("floor", "ceil", "rtn1", "rtn2", "rtne")
+
+# OCP E8M0 reaches 2^-127; we clamp to -126 so every scale is a
+# *normal* f32 and scaling arithmetic stays exact (amax < 2^-120
+# is numerically zero for LLM tensors)
+_E8M0_MIN, _E8M0_MAX = -126, 127
+
+
+def _ceil_log2(x: jax.Array) -> jax.Array:
+    """Exact ceil(log2(x)) for x > 0."""
+    fl = floor_log2(x)
+    exact_pow2 = x == exp2int(fl)
+    return jnp.where(exact_pow2, fl, fl + 1)
+
+
+@partial(jax.jit, static_argnames=("rule", "spec"))
+def shared_scale_exponent(
+    amax: jax.Array, rule: str = "floor", spec: FloatSpec = FP4_E2M1
+) -> jax.Array:
+    """Integer exponent E of the shared scale S = 2^E for each group.
+
+    ``amax``: per-group maximum absolute value (any shape). Returns int32 E of
+    the same shape, clamped to the E8M0 range.
+    """
+    amax = amax.astype(jnp.float32)
+    p = jnp.float32(spec.max_pow2)
+    m = jnp.float32(spec.max_value)
+    safe = jnp.maximum(amax, jnp.float32(1e-30))
+    if rule == "floor":
+        e = floor_log2(safe / p)
+    elif rule in ("ceil", "rtne"):
+        e = _ceil_log2(safe / m)
+    elif rule == "rtn1":
+        e = jnp.round(jnp.log2(safe / m)).astype(jnp.int32)
+    elif rule == "rtn2":
+        e = jnp.round(jnp.log2(safe / p)).astype(jnp.int32)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown scale rule {rule!r}; one of {SCALE_RULES}")
+    e = jnp.where(amax == 0, 0, e)
+    return jnp.clip(e.astype(jnp.int32), _E8M0_MIN, _E8M0_MAX)
+
+
+def e8m0_encode(e: jax.Array) -> jax.Array:
+    """Exponent int -> biased u8 storage (bias 127; 255 reserved/NaN unused)."""
+    return (jnp.clip(e, _E8M0_MIN, _E8M0_MAX) + 127).astype(jnp.uint8)
+
+
+def e8m0_decode(b: jax.Array) -> jax.Array:
+    """Biased u8 -> scale value 2^E as f32 (exact)."""
+    return exp2int(b.astype(jnp.int32) - 127)

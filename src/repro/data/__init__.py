@@ -1,0 +1,3 @@
+# Data substrate: deterministic synthetic LM streams + byte-corpus
+# tokenization, host-sharded with background prefetch.
+from .pipeline import DataConfig, SyntheticLM, ByteCorpus, Prefetcher  # noqa: F401

@@ -1,0 +1,2 @@
+# Distribution substrate: logical sharding rules, context-parallel decode,
+# pipeline parallelism, gradient compression, straggler/elastic handling.

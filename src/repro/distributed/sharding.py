@@ -1,0 +1,254 @@
+"""Logical-axis sharding (MaxText-style) over the production mesh.
+
+Model code annotates activations with *logical* axis names via
+``constrain``; a rules table maps logical names to mesh axes. Outside a
+``use_sharding`` context every call is a no-op, so the same model code runs
+single-device tests and 512-chip dry-runs unchanged.
+
+Default rules (see DESIGN.md Sec. 5):
+  batch    -> ('pod', 'data')   pure DP across pods, DP within pod
+  kv_seq   -> 'data' only in context-parallel serving (long_500k)
+  heads/kv_heads/mlp/vocab/expert_mlp -> 'model'   (tensor parallelism)
+  embed    -> None for activations
+  fsdp     -> 'data'            weight & optimizer-state sharding
+  expert   -> 'data'            expert parallelism when E % data == 0
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES", "use_sharding", "constrain", "logical_to_spec",
+    "named_sharding", "active_mesh", "current_rules",
+]
+
+_state = threading.local()
+
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",          # decode caches: sequence-sharded over TP
+                                # (long_500k overrides to ('data','model'))
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "q_dim": "model",           # fused head*hd projections
+    "kv_dim": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "data",           # EP over the data axis (when divisible)
+    "expert_mlp": "model",
+    "fsdp": "data",             # weight-shard (ZeRO-3) axis
+    "conv": None,
+    "state": None,
+    # sequence parallelism for the residual stream between blocks: set to
+    # 'model' (perf lever) to turn TP activation all-reduces into
+    # reduce-scatter + all-gather pairs (half the wire bytes)
+    "seq_sp": None,
+    # decode caches keep their own batch axis so weight-stationary decode
+    # sharding (batch->None for activations) can still shard the cache
+    "cache_batch": ("pod", "data"),
+}
+
+# activations tolerate GSPMD padding up to this blow-up factor (e.g. 40
+# heads over 16-way TP pads to 48 = 1.2x); weights/state never pad.
+_PAD_WASTE_LIMIT = 1.5
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Optional[dict] = None):
+    """Install a mesh + logical rules for the enclosed trace."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)
+    def _filter(v):
+        if v is None:
+            return None
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in mesh.axis_names)
+            return kept or None
+        return v if v in mesh.axis_names else None
+    merged = {k: _filter(v) for k, v in merged.items()}
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", None)
+    _state.mesh, _state.rules = mesh, merged
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev_mesh, prev_rules
+
+
+def logical_to_spec(axes, shape=None, rules=None, allow_pad=False) -> P:
+    """Tuple of logical axis names (or None) -> PartitionSpec.
+
+    If ``shape`` is given, drop shardings that don't divide the dim.
+    ``allow_pad`` (activations): keep non-dividing shardings when the GSPMD
+    padding waste stays under _PAD_WASTE_LIMIT (e.g. 40 heads over 16-way
+    TP -> 48, 1.2x); 2 kv-heads over 16 (8x) is dropped either way."""
+    rules = rules or current_rules()
+    mesh = active_mesh()
+    out = []
+    for i, a in enumerate(axes):
+        v = rules.get(a) if a else None
+        if v is not None and shape is not None and mesh is not None:
+            size = 1
+            for ax in ((v,) if isinstance(v, str) else v):
+                size *= mesh.shape[ax]
+            if shape[i] % size != 0:
+                d = shape[i]
+                waste = (-(-d // size) * size) / d
+                if not (allow_pad and waste <= _PAD_WASTE_LIMIT):
+                    v = None
+        out.append(v)
+    # PartitionSpec forbids using a mesh axis twice
+    seen: set = set()
+    cleaned = []
+    for v in out:
+        axes_v = (v,) if isinstance(v, str) else (v or ())
+        if any(a in seen for a in axes_v):
+            cleaned.append(None)
+        else:
+            seen.update(axes_v)
+            cleaned.append(v)
+    return P(*cleaned)
+
+
+def named_sharding(axes, shape=None) -> Optional[NamedSharding]:
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(axes, shape))
+
+
+def constrain(x: jax.Array, axes) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without a mesh)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, allow_pad=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter / cache logical axes (path-name driven)
+# ---------------------------------------------------------------------------
+
+_STACKED_GROUPS = ("layers", "mlstm", "slstm", "mamba")
+
+_NAME_AXES = {
+    # attention projections (D, H*hd) etc.
+    "wq": ("fsdp", "q_dim"), "wk": ("fsdp", "kv_dim"), "wv": ("fsdp", "kv_dim"),
+    "wo": ("q_dim", "fsdp"),
+    "bq": ("q_dim",), "bk": ("kv_dim",), "bv": ("kv_dim",),
+    # dense mlp
+    "gate": ("fsdp", "mlp"), "up": ("fsdp", "mlp"), "down": ("mlp", "fsdp"),
+    # ssm / xlstm projections
+    "in_proj": ("fsdp", "mlp"), "out_proj": ("mlp", "fsdp"),
+    "w": ("fsdp", "mlp"), "ff_up": ("fsdp", "mlp"), "ff_down": ("mlp", "fsdp"),
+    "w_o": ("fsdp", "mlp"), "w_if": ("fsdp", None),
+    "router": ("fsdp", None),
+    # embeddings
+    "embed": ("vocab", "fsdp"), "lm_head": ("fsdp", "vocab"),
+}
+
+_MOE_AXES = {  # expert weights (E, K, N)
+    "gate": ("expert", "fsdp", "expert_mlp"),
+    "up": ("expert", "fsdp", "expert_mlp"),
+    "down": ("expert", "expert_mlp", "fsdp"),
+}
+
+_MLSTM_BLOCKDIAG = ("wq", "wk", "wv")     # (H, P, P) under 'mlstm'
+
+
+def infer_logical_axes(path_names: tuple, shape: tuple) -> tuple:
+    """Logical axes tuple for a parameter leaf given its key path + shape."""
+    name = path_names[-1] if path_names else ""
+    stacked = int(any(k in _STACKED_GROUPS for k in path_names))
+    base_ndim = len(shape) - stacked
+    if "mlstm" in path_names and name in _MLSTM_BLOCKDIAG:
+        axes = ("heads", None, None)
+    elif "ffn" in path_names and name in _MOE_AXES and base_ndim == 3:
+        axes = _MOE_AXES[name]
+    elif name in _NAME_AXES and base_ndim == len(_NAME_AXES[name]):
+        axes = _NAME_AXES[name]
+    else:
+        axes = (None,) * base_ndim
+    return (None,) * stacked + axes
+
+
+def _path_names(path) -> tuple:
+    out = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(p, attr):
+                out.append(str(getattr(p, attr)))
+                break
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_shardings(params, mesh: Mesh, rules: Optional[dict] = None):
+    """NamedSharding tree matching ``params`` (PackedWeight-aware: its
+    streams inherit the parent weight's axes)."""
+    with use_sharding(mesh, rules):
+        def leaf_sharding(path, leaf):
+            names = _path_names(path)
+            # PackedWeight children end in codes/scales/meta
+            if names and names[-1] in ("codes", "scales", "meta"):
+                names = names[:-1]
+            axes = infer_logical_axes(names, leaf.shape)
+            return NamedSharding(mesh, logical_to_spec(axes, leaf.shape))
+
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        tdef = jax.tree_util.tree_structure(params)
+        return jax.tree_util.tree_unflatten(
+            tdef, [leaf_sharding(p, l) for p, l in flat])
+
+
+_CACHE_AXES = {
+    "k": (None, "cache_batch", "kv_seq", "kv_heads", None),
+    "v": (None, "cache_batch", "kv_seq", "kv_heads", None),
+    "pos": (None, None),
+    "ssm": (None, "cache_batch", "heads", None, None),
+    "conv": (None, "cache_batch", None, None),
+    "C": (None, "cache_batch", "heads", None, None),
+    "n": (None, "cache_batch", "heads", None),
+    "m": (None, "cache_batch", "heads"),
+    "c": (None, "cache_batch", None),
+    "h": (None, "cache_batch", None),
+}
+
+
+def cache_shardings(caches, mesh: Mesh, rules: Optional[dict] = None):
+    """NamedSharding tree for decode caches (leaves stacked over layers)."""
+    with use_sharding(mesh, rules):
+        def leaf_sharding(path, leaf):
+            names = _path_names(path)
+            name = names[-1] if names else ""
+            if name in ("codes", "scales", "meta") and len(names) >= 2:
+                name = names[-2]            # quantized KV streams -> k/v axes
+            axes = _CACHE_AXES.get(name, (None,) * leaf.ndim)
+            axes = axes[:leaf.ndim]
+            if len(axes) < leaf.ndim:
+                axes = axes + (None,) * (leaf.ndim - len(axes))
+            return NamedSharding(mesh, logical_to_spec(axes, leaf.shape))
+
+        flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+        tdef = jax.tree_util.tree_structure(caches)
+        return jax.tree_util.tree_unflatten(
+            tdef, [leaf_sharding(p, l) for p, l in flat])

@@ -1,0 +1,131 @@
+"""Kernel-side memory layouts (deploy-time transforms, pure jnp).
+
+TPU Mosaic handles reshapes/reductions on *major* dims well but restricts
+minor (lane) dim reshapes, so the kernels keep the quantization axis (the
+GEMM contraction axis K) **major** for every packed operand:
+
+  weights W (K, N):  codes u8 (K/2, N), scales u8 (K/32, N), meta u8 (K/32, N)
+  activations X^T (K, M): same three streams with N -> M
+
+Nibble pairing is *group-half interleaved*: within each group of 32 rows
+along K, byte row ``g*16 + r`` holds the code of row ``g*32 + r`` (low
+nibble) and row ``g*32 + 16 + r`` (high nibble). In-kernel decode then only
+needs major-dim reshapes: (bk/2, n) -> (bk/32, 16, n) -> concat -> (bk, n).
+
+Total footprint: 4 + 4/32 + 8/32 bits = 4.5 bits/element — identical EBW to
+the paper's Sec. 5.2 layout, just a different (TPU-tiled) element order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtypes import FP4_E2M1, exp2int, round_to_grid
+from repro.core.m2xfp import elem_em_encode_parts, sg_em_dequant_with_scale
+from repro.core.packing import group_reshape
+from repro.core.scaling import e8m0_encode, shared_scale_exponent
+
+GROUP = 32
+SUBGROUP = 8
+N_SUB = GROUP // SUBGROUP
+
+__all__ = [
+    "GROUP", "SUBGROUP", "N_SUB",
+    "pack_w_sgem", "pack_w_mxfp4", "pack_x_elem_em",
+    "interleave_pack", "interleave_unpack",
+]
+
+
+def interleave_pack(codes: jax.Array) -> jax.Array:
+    """Sign-magnitude 4-bit codes (K, n) -> u8 (K/2, n), group-half pairing."""
+    k, n = codes.shape
+    cg = codes.reshape(k // GROUP, GROUP, n).astype(jnp.uint8)
+    lo = cg[:, :16, :]
+    hi = cg[:, 16:, :]
+    return ((lo & 0xF) | (hi << 4)).reshape(k // 2, n)
+
+
+def interleave_unpack(packed: jax.Array) -> jax.Array:
+    """u8 (K/2, n) -> int32 codes (K, n) (inverse of interleave_pack)."""
+    k2, n = packed.shape
+    pg = packed.reshape(k2 // 16, 16, n)
+    lo = (pg & 0xF).astype(jnp.int32)
+    hi = (pg >> 4).astype(jnp.int32)
+    return jnp.concatenate([lo, hi], axis=1).reshape(2 * k2, n)
+
+
+def _pack_meta_fields(fields: jax.Array) -> jax.Array:
+    """2-bit fields (G, 4, n) -> u8 (G, n), subgroup j at bits 2j..2j+1."""
+    f = fields.astype(jnp.uint32) & 0x3
+    return (f[:, 0] | (f[:, 1] << 2) | (f[:, 2] << 4) | (f[:, 3] << 6)).astype(
+        jnp.uint8)
+
+
+def _sign_mag(values: jax.Array, negative: jax.Array) -> jax.Array:
+    """FP4 grid values + sign mask -> 4-bit sign-magnitude codes."""
+    from repro.core.dtypes import fp4_value_to_code
+    mag = fp4_value_to_code(jnp.abs(values))
+    return jnp.where(negative, mag | 8, mag).astype(jnp.int32)
+
+
+def pack_w_sgem(w: jax.Array, adaptive: bool = True, rule: str = "floor"):
+    """Sg-EM-2bit pack of weights (K, N), quantization groups along K.
+
+    Returns dict(codes u8 (K/2,N), scales u8 (K/32,N), meta u8 (K/32,N)).
+    """
+    k, n = w.shape
+    wt = w.astype(jnp.float32).T                       # (N, K), groups on last
+    wg = group_reshape(wt, GROUP)                      # (N, K/32, 32)
+    amax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True)
+    e = shared_scale_exponent(amax, rule)
+    s = exp2int(e)
+    _, k_sel, b_val = sg_em_dequant_with_scale(
+        wg, s, SUBGROUP, bits=2, adaptive=adaptive, return_codes=True)
+    e_stored = e[..., 0] + b_val                       # (N, K/32)
+    s_final = (1.0 + k_sel.astype(jnp.float32) / 4.0) * \
+        exp2int(e_stored)[..., None]                   # (N, K/32, 4)
+    wsub = wg.reshape(n, k // GROUP, N_SUB, SUBGROUP)
+    q = round_to_grid(wsub / s_final[..., None], FP4_E2M1)
+    codes = _sign_mag(q, wsub < 0).reshape(n, k).T     # (K, N)
+    meta = _pack_meta_fields(k_sel.transpose(1, 2, 0))  # (K/32, 4, N) -> (K/32, N)
+    return {
+        "codes": interleave_pack(codes),
+        "scales": e8m0_encode(e_stored).T,             # (K/32, N)
+        "meta": meta,                                  # (K/32, N)
+    }
+
+
+def pack_w_mxfp4(w: jax.Array, rule: str = "floor"):
+    """Plain MXFP4 pack of weights (K, N) (baseline kernel operand)."""
+    k, n = w.shape
+    wt = w.astype(jnp.float32).T
+    wg = group_reshape(wt, GROUP)
+    amax = jnp.max(jnp.abs(wg), axis=-1, keepdims=True)
+    e = shared_scale_exponent(amax, rule)
+    s = exp2int(e)
+    q = round_to_grid(wg / s, FP4_E2M1)
+    codes = _sign_mag(q, wg < 0).reshape(n, k).T
+    return {
+        "codes": interleave_pack(codes),
+        "scales": e8m0_encode(e[..., 0]).T,            # (K/32, N)
+    }
+
+
+def pack_x_elem_em(x: jax.Array, rule: str = "floor"):
+    """Elem-EM-top1 pack of activations (M, K) into K-major kernel layout.
+
+    Returns dict(codes u8 (K/2,M), scales u8 (K/32,M), meta u8 (K/32,M)).
+    """
+    m, k = x.shape
+    xg = group_reshape(x.astype(jnp.float32), GROUP)   # (M, K/32, 32)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    e = shared_scale_exponent(amax, rule)
+    s = exp2int(e)
+    q4, _, _, meta, _ = elem_em_encode_parts(xg, s, SUBGROUP)
+    codes = _sign_mag(q4, xg < 0).reshape(m, k).T      # (K, M)
+    meta_b = _pack_meta_fields(meta.transpose(1, 2, 0))  # (K/32, 4, M) -> (K/32, M)
+    return {
+        "codes": interleave_pack(codes),
+        "scales": e8m0_encode(e[..., 0]).T,            # (K/32, M)
+        "meta": meta_b,                                # (K/32, M)
+    }

@@ -1,0 +1,71 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` for
+correctness validation; on a TPU backend they compile through Mosaic.
+Wrappers handle padding of the row dimension M (K and N must satisfy the
+packed-layout alignment: K % 32 == 0, N % 128 == 0 for default blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layout import pack_w_mxfp4, pack_w_sgem, pack_x_elem_em
+from .m2xfp_matmul import m2xfp_matmul_kernel, m2xfp_qmatmul_kernel
+from .m2xfp_quantize import m2xfp_quantize_kernel
+from .mxfp4_matmul import mxfp4_matmul_kernel
+
+__all__ = [
+    "on_tpu", "m2xfp_matmul", "m2xfp_qmatmul", "mxfp4_matmul",
+    "m2xfp_quantize", "pack_w_sgem", "pack_w_mxfp4", "pack_x_elem_em",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, multiple: int):
+    m = x.shape[0]
+    pad = (-m) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def m2xfp_matmul(x: jax.Array, w_packed: dict, *, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 512) -> jax.Array:
+    """x (M, K) @ Sg-EM-packed W (K, N) -> f32 (M, N)."""
+    xp, m = _pad_rows(x, block_m if x.shape[0] > 8 else 8)
+    out = m2xfp_matmul_kernel(
+        xp, w_packed["codes"], w_packed["scales"], w_packed["meta"],
+        bm=block_m, bn=block_n, bk=block_k, interpret=not on_tpu())
+    return out[:m]
+
+
+def mxfp4_matmul(x: jax.Array, w_packed: dict, *, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 512) -> jax.Array:
+    """x (M, K) @ MXFP4-packed W (K, N) -> f32 (M, N)."""
+    xp, m = _pad_rows(x, block_m if x.shape[0] > 8 else 8)
+    out = mxfp4_matmul_kernel(
+        xp, w_packed["codes"], w_packed["scales"],
+        bm=block_m, bn=block_n, bk=block_k, interpret=not on_tpu())
+    return out[:m]
+
+
+def m2xfp_qmatmul(x_packed: dict, w_packed: dict, *, block_m: int = 128,
+                  block_n: int = 128, block_k: int = 512) -> jax.Array:
+    """Fully-packed W4A4 GEMM: Elem-EM X (K-major) @ Sg-EM W -> f32 (M, N)."""
+    return m2xfp_qmatmul_kernel(
+        x_packed["codes"], x_packed["scales"], x_packed["meta"],
+        w_packed["codes"], w_packed["scales"], w_packed["meta"],
+        bm=block_m, bn=block_n, bk=block_k, interpret=not on_tpu())
+
+
+def m2xfp_quantize(x: jax.Array, *, block_m: int = 256,
+                   block_k: int = 512) -> dict:
+    """Online Elem-EM quantize of activations x (M, K) -> packed streams
+    in K-major kernel layout (feeds m2xfp_qmatmul)."""
+    codes, scales, meta = m2xfp_quantize_kernel(
+        x.T, bm=block_m, bk=block_k, interpret=not on_tpu())
+    return {"codes": codes, "scales": scales, "meta": meta}

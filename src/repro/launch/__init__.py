@@ -1,0 +1,1 @@
+# Launchers: production mesh builder, multi-pod dry-run, train/serve drivers.

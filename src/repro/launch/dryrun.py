@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * 16x16 single-pod mesh (256 chips) and 2x16x16 multi-pod mesh (512),
+  * every assigned architecture x its applicable input shapes,
+  * train_4k lowers train_step (AdamW included), prefill_32k lowers the
+    forward prefill, decode/long lower serve_step against a full cache,
+  * serve cells run the paper-faithful M2XFP deployment (weights packed at
+    4.5 bits/element, online Elem-EM activation quantization),
+  * memory_analysis() proves fit; cost_analysis() + the loop-aware HLO
+    analyzer (analysis/hlo.py) feed the roofline table.
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+os.environ.setdefault("REPRO_FAITHFUL_DOTS", "1")   # keep bf16 operand widths
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import model_flops, roofline
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable_shapes, input_specs
+from repro.distributed.sharding import (
+    cache_shardings, param_shardings, logical_to_spec, use_sharding,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (
+    decode_step, forward, init_caches, init_params, pack_params_for_serving,
+)
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import make_train_state, make_train_step, \
+    train_state_shardings
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+# Gradient-accumulation microbatches per arch for train_4k: bounds the live
+# activation set (layer-boundary remat stubs + MoE dispatch transients) to
+# fit 16 GB v5e HBM. global_batch stays 256; microbatch = 256 / N.
+TRAIN_MICROBATCHES = {
+    "qwen2-0.5b": 1, "xlstm-125m": 1,
+    "mixtral-8x22b": 8, "zamba2-7b": 8,
+}
+DEFAULT_MICROBATCHES = 4
+
+
+def _data_shardings(batch_specs: dict, mesh, rules=None):
+    from jax.sharding import NamedSharding
+    with use_sharding(mesh, rules):
+        out = {}
+        for k, v in batch_specs.items():
+            axes = ("batch",) + (None,) * (len(v.shape) - 1)
+            out[k] = NamedSharding(mesh, logical_to_spec(axes, v.shape))
+        return out
+
+
+def build_lowered(arch: str, shape_name: str, mesh, quant_train: str = "none",
+                  rules=None):
+    """Returns (lowered, meta) for one cell."""
+    base_cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kind = shape["kind"]
+    key = jax.random.key(0)
+
+    if kind == "train":
+        cfg = dataclasses.replace(base_cfg, quant=quant_train)
+        if os.environ.get("REPRO_MOE_GROUP"):
+            cfg = dataclasses.replace(
+                cfg, moe_group_size=int(os.environ["REPRO_MOE_GROUP"]))
+        state_sds = jax.eval_shape(
+            lambda: make_train_state(key, cfg))
+        batch_sds = input_specs(cfg, shape_name)
+        mb = TRAIN_MICROBATCHES.get(arch, DEFAULT_MICROBATCHES)
+        with use_sharding(mesh, rules):
+            state_sh = train_state_shardings(state_sds, mesh, rules)
+            batch_sh = _data_shardings(batch_sds, mesh, rules)
+            step = make_train_step(cfg, AdamWConfig(), num_microbatches=mb)
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=0)
+            lowered = fn.lower(state_sds, batch_sds)
+        return lowered, dict(cfg=cfg, shape=shape)
+
+    # serving cells: packed M2XFP weights (the paper-faithful deployment);
+    # REPRO_KV_QUANT=m2xfp additionally packs the KV cache (Sec. 6.4 lever)
+    cfg = dataclasses.replace(
+        base_cfg, quant="serve",
+        kv_quant=os.environ.get("REPRO_KV_QUANT", "none"))
+    params_sds = jax.eval_shape(lambda: init_params(key, cfg))
+    packed_sds = jax.eval_shape(
+        lambda p: pack_params_for_serving(p, cfg), params_sds)
+    batch_sds = input_specs(cfg, shape_name)
+
+    if kind == "prefill":
+        with use_sharding(mesh, rules):
+            p_sh = param_shardings(packed_sds, mesh, rules)
+            b_sh = _data_shardings(batch_sds, mesh, rules)
+            fn = jax.jit(lambda p, b: forward(p, cfg, b),
+                         in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(packed_sds, batch_sds)
+        return lowered, dict(cfg=cfg, shape=shape)
+
+    # decode: one token against a pre-filled cache of seq_len
+    cache_sds = jax.eval_shape(
+        lambda: init_caches(cfg, shape["batch"], shape["seq"]))
+    idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    with use_sharding(mesh, rules):
+        p_sh = param_shardings(packed_sds, mesh, rules)
+        b_sh = _data_shardings(batch_sds, mesh, rules)
+        c_sh = cache_shardings(cache_sds, mesh, rules)
+        from jax.sharding import NamedSharding, PartitionSpec
+        i_sh = NamedSharding(mesh, PartitionSpec())
+        fn = jax.jit(lambda p, b, c, i: decode_step(p, cfg, b, c, i),
+                     in_shardings=(p_sh, b_sh, c_sh, i_sh),
+                     donate_argnums=2)
+        lowered = fn.lower(packed_sds, batch_sds, cache_sds, idx_sds)
+    return lowered, dict(cfg=cfg, shape=shape)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             quant_train: str = "none", save: bool = True) -> dict:
+    mesh_name = "pod512" if multi_pod else "pod256"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = None
+    if shape_name == "long_500k":
+        # batch=1: context-parallel over BOTH axes (500k cache / 256 shards)
+        rules = {"kv_seq": ("data", "model")}
+    # perf-iteration lever: logical-rule overrides, e.g.
+    # REPRO_RULES_JSON='{"fsdp": null, "mlp": ["data","model"]}'
+    env_rules = os.environ.get("REPRO_RULES_JSON")
+    if env_rules:
+        overrides = {
+            k: (tuple(v) if isinstance(v, list) else v)
+            for k, v in json.loads(env_rules).items()}
+        rules = {**(rules or {}), **overrides}
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "chips": chips, "ok": False}
+    try:
+        lowered, meta = build_lowered(arch, shape_name, mesh,
+                                      quant_train, rules)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        hlo = analyze_hlo(text)
+        mf = model_flops(meta["cfg"], meta["shape"])
+        rt = roofline(hlo.flops, hlo.hbm_bytes, hlo.collective_bytes,
+                      chips, mf)
+        result.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_per_device": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes - ma.alias_size_in_bytes,
+                # caveat metric: the CPU backend hoists f32 mirrors of
+                # bf16 loop buffers (no bf16 dot kernels on CPU); a TPU
+                # MXU consumes bf16 directly, so the true peak is lower
+                # by up to this amount (see hlo.py).
+                "cpu_f32_mirror_bytes": hlo.f32_mirror_bytes,
+            },
+            "cost_analysis": {
+                "flops_per_device_unrolled_once": ca.get("flops", 0.0),
+                "bytes_accessed_once": ca.get("bytes accessed", 0.0),
+            },
+            "hlo_analysis": {
+                "flops_per_device": hlo.flops,
+                "hbm_bytes_per_device": hlo.hbm_bytes,
+                "collective_bytes_per_device": hlo.collective_bytes,
+                "per_kind_bytes": hlo.per_kind_bytes,
+                "per_kind_count": hlo.per_kind_count,
+                "loop_trips": hlo.loop_trips,
+            },
+            "roofline": rt.as_dict(),
+        })
+    except Exception as e:  # noqa: BLE001 — a cell failure is a data point
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        d = os.path.join(RESULTS_DIR, mesh_name)
+        os.makedirs(d, exist_ok=True)
+        safe_arch = arch.replace(".", "_")
+        with open(os.path.join(d, f"{safe_arch}__{shape_name}.json"),
+                  "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant-train", default="none",
+                    choices=["none", "qat"])
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS[:-1]) if args.all else [args.arch]  # paper cfg excluded
+    for arch in archs:
+        if arch is None:
+            ap.error("--arch or --all required")
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg) if args.shape is None \
+            else [args.shape]
+        for sh in shapes:
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    for arch, sh, mp in cells:
+        r = run_cell(arch, sh, mp, args.quant_train)
+        status = "OK " if r["ok"] else "FAIL"
+        extra = ""
+        if r["ok"]:
+            rt = r["roofline"]
+            extra = (f"dom={rt['dominant']:10s} "
+                     f"frac={rt['roofline_fraction']:.3f} "
+                     f"peak/dev={r['memory']['peak_per_device']/2**30:.2f}GiB "
+                     f"compile={r['compile_s']}s")
+        else:
+            extra = r["error"][:160]
+        print(f"[{status}] {r['mesh']} {arch:16s} {sh:12s} {extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh builder.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state. Single pod: 16x16 = 256 chips ('data', 'model'); multi-pod:
+2x16x16 = 512 chips ('pod', 'data', 'model') — the 'pod' axis is pure data
+parallelism across pods (slow inter-pod links carry only gradient
+reductions, optionally compressed; see train/compression.py).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (requires
+    --xla_force_host_platform_device_count to cover the shape)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

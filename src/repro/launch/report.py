@@ -1,0 +1,110 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report > experiments/roofline.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable_shapes
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "dryrun")
+
+IMPROVE_HINTS = {
+    "memory": ("fuse attention probabilities into a Pallas flash kernel / "
+               "raise arithmetic intensity (bigger per-chip batch)"),
+    "collective": ("bf16 TP reductions + sequence-parallel norm regions; "
+                   "EP-friendlier expert placement"),
+    "compute": "remat policy tuning (save dots) to cut recompute",
+}
+
+
+def load(mesh: str) -> dict:
+    out = {}
+    for f in glob.glob(os.path.join(DIR, mesh, "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def roofline_table(cells: dict) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS | useful ratio | roofline frac | peak GiB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS[:-1]:
+        cfg = get_config(arch)
+        for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+            if shape not in applicable_shapes(cfg):
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | — | — | — | — | — | "
+                    f"skipped: full-attention arch at 500k ctx "
+                    f"(DESIGN.md §Arch-applicability) |")
+                continue
+            r = cells.get((arch, shape))
+            if r is None or not r.get("ok"):
+                err = (r or {}).get("error", "missing")
+                lines.append(f"| {arch} | {shape} | FAILED: {err[:60]} |"
+                             + " — |" * 9)
+                continue
+            rt = r["roofline"]
+            peak = r["memory"]["peak_per_device"] / 2 ** 30
+            dom = rt["dominant"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(rt['compute_s'])} | "
+                f"{fmt_s(rt['memory_s'])} | {fmt_s(rt['collective_s'])} | "
+                f"**{dom}** | {rt['model_flops']:.2e} | "
+                f"{rt['useful_ratio']:.2f} | {rt['roofline_fraction']:.3f} | "
+                f"{peak:.1f} | {IMPROVE_HINTS[dom][:58]} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(cells256: dict, cells512: dict) -> str:
+    lines = [
+        "| arch | shape | pod256 | pod512 | peak256 GiB | peak512 GiB | "
+        "coll bytes/dev 256 | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = 0
+    for arch in ARCHS[:-1]:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            a = cells256.get((arch, shape))
+            b = cells512.get((arch, shape))
+            ok_a = "OK" if a and a.get("ok") else "FAIL"
+            ok_b = "OK" if b and b.get("ok") else "FAIL"
+            n_ok += int(ok_a == "OK") + int(ok_b == "OK")
+            pa = a["memory"]["peak_per_device"] / 2 ** 30 if a and a.get("ok") else 0
+            pb = b["memory"]["peak_per_device"] / 2 ** 30 if b and b.get("ok") else 0
+            cb = (a["hlo_analysis"]["collective_bytes_per_device"] / 1e9
+                  if a and a.get("ok") else 0)
+            cs = a.get("compile_s", 0) if a else 0
+            lines.append(f"| {arch} | {shape} | {ok_a} | {ok_b} | {pa:.1f} | "
+                         f"{pb:.1f} | {cb:.1f} GB | {cs} |")
+    lines.append(f"\n{n_ok} cell-compilations passed.")
+    return "\n".join(lines)
+
+
+def main():
+    c256 = load("pod256")
+    c512 = load("pod512")
+    print("## §Dry-run (lower+compile, 16x16 and 2x16x16 meshes)\n")
+    print(dryrun_table(c256, c512))
+    print("\n## §Roofline (single-pod, 256 chips, TPU v5e constants)\n")
+    print(roofline_table(c256))
+
+
+if __name__ == "__main__":
+    main()

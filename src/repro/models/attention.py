@@ -1,0 +1,296 @@
+"""GQA attention supporting every assigned variant:
+
+  * grouped KV heads (any n_kv <= n_heads), KV-head repeat under TP
+  * sliding-window attention (mixtral; gemma2 local layers)
+  * local/global alternating layers (gemma2)
+  * attention logit soft-capping (gemma2)
+  * qk-norm (qwen3), QKV bias (qwen2/2.5)
+  * ring-buffer KV cache for bounded-window decode; sequence-sharded cache
+    for 32k/500k decode (softmax reduction crosses the shard axis — the
+    GSPMD equivalent of ring attention)
+
+Train/prefill attention is **chunked flash-style**: a lax.scan over KV
+chunks carrying the running (max, normalizer, accumulator) — activation
+memory is O(S * chunk) instead of O(S^2), which is what makes prefill_32k
+lowerable at all. KV heads are repeated to n_heads *per chunk* so every
+attention tensor shards uniformly on the head axis (GSPMD pads 40 -> 48
+heads over 16-way TP; the KV *cache* keeps n_kv heads — the GQA memory win
+is preserved).
+
+Quantized GEMMs (the paper's technique) apply to the QKV/O projections via
+``quantized_matmul``; the KV cache itself can additionally be stored in
+M2XFP (Sg-EM for K/V per paper Sec. 6.4) — see kvquant.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import apply_rope, rms_norm, softcap
+from .numerics import einsum_f32acc
+from .quant import init_linear, quantized_matmul
+
+NEG_INF = -2.0e38
+
+
+def _env_int(name, default):
+    import os
+    return int(os.environ.get(name, default))
+
+
+# perf levers (§Perf): larger chunks -> fewer scan iterations -> less
+# carry/operand re-traffic; smaller -> lower live memory
+KV_CHUNK = _env_int("REPRO_ATTN_KV_CHUNK", 512)
+Q_TILE = _env_int("REPRO_ATTN_Q_TILE", 1024)
+
+
+def init_attention(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, hd, nh, nkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, nh * hd, dtype=dtype),
+        "wk": init_linear(ks[1], d, nkv * hd, dtype=dtype),
+        "wv": init_linear(ks[2], d, nkv * hd, dtype=dtype),
+        "wo": init_linear(ks[3], nh * hd, d, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions, quant):
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = quantized_matmul(x, p["wq"], quant, cfg.quant_format)
+    k = quantized_matmul(x, p["wk"], quant, cfg.quant_format)
+    v = quantized_matmul(x, p["wv"], quant, cfg.quant_format)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, T, nkv, hd) -> (B, T, nkv*n_rep, hd)."""
+    if n_rep == 1:
+        return x
+    b, t, nkv, hd = x.shape
+    return jnp.broadcast_to(
+        x[:, :, :, None, :], (b, t, nkv, n_rep, hd)
+    ).reshape(b, t, nkv * n_rep, hd)
+
+
+def _pad_chunks(x, pos, chunk):
+    """Pad KV seq to a chunk multiple; padded positions get -1 (masked)."""
+    t = x[0].shape[1]
+    pad = (-t) % chunk
+    if pad == 0:
+        return x, pos
+    x = [jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in x]
+    pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    return x, pos
+
+
+def _chunked_attention(q, k, v, pos_q, pos_k, cfg, window,
+                       chunk: int = KV_CHUNK, q_tile: int = Q_TILE):
+    """Flash-style streaming attention, q-tiled.
+
+    Outer lax.scan over q tiles of ``q_tile`` (bounds the live score/acc
+    buffers to O(B * nh * q_tile * chunk) instead of O(B * nh * S * chunk) —
+    this is what keeps prefill_32k inside HBM); inner scan over KV chunks
+    with running (max, normalizer, accumulator).
+
+    q (B,S,nh,hd); k/v (B,T,nkv,hd); pos_* (B, S/T) absolute positions
+    (-1 = invalid kv). ``window`` traced int32 (2^30 = global).
+    Returns (B, S, nh, hd) f32."""
+    b, s, nh, hd = q.shape
+    if s > q_tile and s % q_tile == 0:
+        nq = s // q_tile
+        qt = q.reshape(b, nq, q_tile, nh, hd).transpose(1, 0, 2, 3, 4)
+        pt = pos_q.reshape(b, nq, q_tile).transpose(1, 0, 2)
+
+        def tile_body(_, xs):
+            q_i, p_i = xs
+            out = _chunked_attention_inner(q_i, k, v, p_i, pos_k, cfg,
+                                           window, chunk)
+            return None, out
+
+        _, outs = jax.lax.scan(tile_body, None, (qt, pt))
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+    return _chunked_attention_inner(q, k, v, pos_q, pos_k, cfg, window,
+                                    chunk)
+
+
+def _chunked_attention_inner(q, k, v, pos_q, pos_k, cfg, window,
+                             chunk: int = KV_CHUNK):
+    b, s, nh, hd = q.shape
+    n_rep = nh // k.shape[2]
+    c = min(chunk, k.shape[1])
+    (k, v), pos_k = _pad_chunks([k, v], pos_k, c)
+    t = k.shape[1]
+    nc = t // c
+    kc = k.reshape(b, nc, c, -1, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, c, -1, hd).transpose(1, 0, 2, 3, 4)
+    pc = pos_k.reshape(b, nc, c).transpose(1, 0, 2)
+
+    qf = q.astype(jnp.bfloat16)
+    scale = hd ** -0.5
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kch, vch, pch = xs                       # (B,c,nkv,hd), (B,c)
+        kch = _repeat_kv(kch, n_rep)
+        vch = _repeat_kv(vch, n_rep)
+        sc = einsum_f32acc("bsnd,bcnd->bnsc", qf,
+                           kch.astype(jnp.bfloat16)) * scale
+        sc = softcap(sc, cfg.attn_softcap)
+        valid = (pch >= 0)[:, None, :] & \
+            (pos_q[:, :, None] >= pch[:, None, :]) & \
+            (pos_q[:, :, None] - pch[:, None, :] < window)  # (B,S,c)
+        validb = valid[:, None, :, :]                        # (B,1,S,c)
+        sc = jnp.where(validb, sc, NEG_INF)
+        sc = constrain(sc, ("batch", "heads", None, None))
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.where(validb, jnp.exp(sc - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = einsum_f32acc("bnsc,bcnd->bnsd", p.astype(jnp.bfloat16),
+                           vch.astype(jnp.bfloat16))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, nh, s), NEG_INF, jnp.float32),
+            jnp.zeros((b, nh, s), jnp.float32),
+            jnp.zeros((b, nh, s, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3)                         # (B,S,nh,hd)
+
+
+def attention_forward(
+    p: dict, x: jax.Array, cfg, positions: jax.Array,
+    window=None, quant: str = "none",
+):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = _project_qkv(p, x, cfg, positions, quant)
+    w = jnp.int32(2 ** 30) if window is None else window
+    out = _chunked_attention(q, k, v, positions, positions, cfg, w)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, -1).astype(x.dtype)
+    out = constrain(out, ("batch", "seq", "q_dim"))
+    out = quantized_matmul(out, p["wo"], quant, cfg.quant_format)
+    return out, (k, v)
+
+
+def attention_decode(
+    p: dict, x: jax.Array, cfg, cache: dict, index: jax.Array,
+    window=None, quant: str = "none",
+):
+    """One-token decode against a ring-buffer KV cache.
+
+    cache: {"k": (B,W,nkv,hd), "v": (B,W,nkv,hd), "pos": (W,) int32 (-1 =
+    empty)}. ``index``: absolute position of the new token. The cache is
+    sequence-sharded ('kv_seq' -> TP axis); the softmax reduction over W
+    crosses shards (GSPMD ring-attention-equivalent)."""
+    b = x.shape[0]
+    quantized_kv = cfg.kv_quant == "m2xfp"
+    w = (cache["k"]["codes"] if quantized_kv else cache["k"]).shape[1]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos_new = jnp.full((b, 1), index, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos_new, quant)
+
+    slot = jnp.mod(index, w)
+    if quantized_kv:
+        from .kvquant import kv_decode, kv_encode
+        kc, vc = {}, {}
+        for name, new, store in (("k", k_new, kc), ("v", v_new, vc)):
+            enc = kv_encode(new)
+            for key in ("codes", "scales", "meta"):
+                store[key] = jax.lax.dynamic_update_slice(
+                    cache[name][key], enc[key], (0, slot, 0, 0))
+                store[key] = constrain(
+                    store[key], ("batch", "kv_seq", "kv_heads", None))
+        k = kv_decode(kc)
+        v = kv_decode(vc)
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        kc, vc = k, v
+    pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.full((1,), index, jnp.int32), (slot,))
+    k = constrain(k, ("batch", "kv_seq", "kv_heads", None))
+    v = constrain(v, ("batch", "kv_seq", "kv_heads", None))
+
+    eff_w = jnp.int32(2 ** 30) if window is None else window
+    # single-token scores over the whole cache: (B, nkv, g, W)
+    g = nh // nkv
+    qh = q.reshape(b, nkv, g, hd).astype(jnp.bfloat16)
+    sc = einsum_f32acc("bkgd,bwkd->bkgw", qh,
+                       k.astype(jnp.bfloat16)) * (hd ** -0.5)
+    sc = softcap(sc, cfg.attn_softcap)
+    valid = (pos >= 0) & (pos <= index) & (index - pos < eff_w)
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    sc = constrain(sc, ("batch", "kv_heads", None, "kv_seq"))
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = einsum_f32acc("bkgw,bwkd->bkgd", probs.astype(jnp.bfloat16),
+                        v.astype(jnp.bfloat16))
+    out = out.reshape(b, 1, nh * hd).astype(x.dtype)
+    out = constrain(out, ("batch", "seq", "q_dim"))
+    out = quantized_matmul(out, p["wo"], quant, cfg.quant_format)
+    return out, {"k": kc, "v": vc, "pos": pos}
+
+
+def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,
+               dtype=jnp.bfloat16) -> dict:
+    """Empty ring-buffer cache. Size = min(window, max_len) when windowed.
+    cfg.kv_quant == 'm2xfp': K/V stored as packed Sg-EM streams (Sec. 6.4,
+    4.5 bits/elem resident)."""
+    w = min(window, max_len) if window else max_len
+    if cfg.kv_quant == "m2xfp":
+        from .kvquant import kv_cache_spec
+        return {
+            "k": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd),
+            "v": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd),
+            "pos": jnp.full((w,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def cache_from_prefill(k: jax.Array, v: jax.Array, positions: jax.Array,
+                       window: Optional[int] = None) -> dict:
+    """Build a decode cache from prefill K/V (keeps the trailing window)."""
+    s = k.shape[1]
+    w = min(window, s) if window else s
+    # ring layout: slot = pos % w; for contiguous positions [s-w, s) this is
+    # a roll of the trailing slice
+    k_t, v_t = k[:, s - w:], v[:, s - w:]
+    pos_t = positions[0, s - w:]
+    shift = jnp.mod(pos_t[0], w)
+    k_r = jnp.roll(k_t, shift, axis=1)
+    v_r = jnp.roll(v_t, shift, axis=1)
+    pos_r = jnp.roll(pos_t, shift, axis=0)
+    return {"k": k_r, "v": v_r, "pos": pos_r}

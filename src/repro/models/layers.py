@@ -1,0 +1,73 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embedding tables."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quant import init_linear, quantized_matmul
+
+__all__ = [
+    "rms_norm", "init_rms_norm", "rope_freqs", "apply_rope", "softcap",
+    "init_mlp", "mlp_apply", "init_embedding",
+]
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                              # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, ff, dtype=dtype),
+        "up": init_linear(k2, d, ff, dtype=dtype),
+        "down": init_linear(k3, ff, d, dtype=dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, quant: str = "none",
+              fmt: str = "m2xfp") -> jax.Array:
+    g = quantized_matmul(x, p["gate"], quant, fmt)
+    u = quantized_matmul(x, p["up"], quant, fmt)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return quantized_matmul(h, p["down"], quant, fmt)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

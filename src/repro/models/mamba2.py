@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrent step for decode (zamba2's backbone; `long_500k` capable).
+
+Faithful to the Mamba2 structure: fused in_proj -> (z, x, B, C, dt), causal
+depthwise conv + SiLU on (x, B, C), per-head scalar decay a = exp(dt * A),
+state h_t = a_t h_{t-1} + dt_t * B_t (x) x_t, output y_t = C_t . h_t + D x_t,
+gated RMSNorm, out_proj. ngroups = 1 (B/C shared across heads).
+
+Chunked SSD (chunk L): intra-chunk is an attention-like masked product
+(C_t.B_s * exp(l_t - l_s)); inter-chunk carries (B, H, P, N) states through a
+`lax.scan` over chunks — O(S L) + O(S/L) sequential steps instead of O(S).
+All recurrence math in f32; GEMM-shaped contractions in bf16 -> f32.
+
+The in/out projections go through ``quantized_matmul`` (the paper's
+technique applies to the GEMM operands; the recurrence itself is not a GEMM
+operand and stays full precision — see DESIGN.md Sec. 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import rms_norm
+from .quant import init_linear, quantized_matmul
+
+CHUNK = 128
+
+
+def _dims(cfg):
+    din = cfg.ssm_expand * cfg.d_model
+    nheads = din // cfg.ssm_head_dim
+    return din, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    din, h, p_, n = _dims(cfg)
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * din + 2 * n + h, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((din,), jnp.float32),
+        "out_proj": init_linear(ks[3], din, d, dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    din, h, p_, n = _dims(cfg)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * n]
+    dt = zxbcdt[..., din + din + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out)
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg, quant: str = "none"):
+    """Full-sequence SSD. x: (B, S, D). Returns (y, final_state)."""
+    bsz, s, d = x.shape
+    din, h, hp, n = _dims(cfg)
+    l = min(CHUNK, s)
+    nc = s // l
+
+    zxbcdt = quantized_matmul(x, p["in_proj"], quant, cfg.quant_format)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :din].reshape(bsz, s, h, hp)             # (B,S,H,P) f32
+    bmat = xbc[..., din:din + n]                            # (B,S,N)
+    cmat = xbc[..., din + n:]                               # (B,S,N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                # (H,)
+    loga = dt * a                                           # log decay <= 0
+
+    # chunk views
+    xs_c = (xs * dt[..., None]).reshape(bsz, nc, l, h, hp)  # dt-weighted input
+    b_c = bmat.reshape(bsz, nc, l, n)
+    c_c = cmat.reshape(bsz, nc, l, n)
+    la_c = loga.reshape(bsz, nc, l, h)
+    lcum = jnp.cumsum(la_c, axis=2)                         # (B,nc,L,H)
+
+    # ---- intra-chunk (attention-like, causal) ----
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)            # (B,nc,L,L)
+    ldiff = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    # mask INSIDE the exponent: exp of masked (+large) entries would be inf
+    # and poison the backward pass with inf * 0 cotangents
+    ldiff = jnp.where(mask[None, None, :, :, None], ldiff, -1e9)
+    decay = jnp.exp(ldiff)
+    scores = cb[..., None] * decay                          # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xs_c)
+
+    # ---- chunk states + inter-chunk scan ----
+    decay_to_end = jnp.exp(lcum[:, :, -1:, :] - lcum)       # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        b_c, decay_to_end, xs_c)            # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])                # (B,nc,H)
+
+    def step(carry, inp):
+        st, cd = inp                                        # (B,H,P,N),(B,H)
+        out = carry
+        new = carry * cd[:, :, None, None] + st
+        return new, out
+
+    init = jnp.zeros((bsz, h, hp, n), jnp.float32)
+    final, h_prev = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", c_c, h_prev) \
+        * jnp.exp(lcum)[..., None]                          # decay from start
+    y = (y_intra + y_inter).reshape(bsz, s, h, hp) \
+        + xs * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"],
+                 cfg.norm_eps)
+    out = quantized_matmul(y.astype(x.dtype), p["out_proj"], quant,
+                           cfg.quant_format)
+    return out, {"ssm": final, "conv": xbc_raw_tail(zxbcdt, cfg, s)}
+
+
+def xbc_raw_tail(zxbcdt: jax.Array, cfg, s: int) -> jax.Array:
+    """Last (conv-1) pre-conv inputs — the decode conv state."""
+    din, h, p_, n = _dims(cfg)
+    xbc = zxbcdt[..., din:din + din + 2 * n]
+    k = cfg.ssm_conv
+    return xbc[:, s - (k - 1):, :].astype(jnp.float32)
+
+
+def init_mamba2_cache(cfg, batch: int) -> dict:
+    din, h, p_, n = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, p_, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * n), jnp.float32),
+    }
+
+
+def mamba2_decode(p: dict, x: jax.Array, cfg, cache: dict,
+                  quant: str = "none"):
+    """Single-token step. x: (B, 1, D). Returns (y, new_cache)."""
+    bsz = x.shape[0]
+    din, h, hp, n = _dims(cfg)
+    zxbcdt = quantized_matmul(x, p["in_proj"], quant, cfg.quant_format)
+    z, xbc_new, dt = _split_proj(zxbcdt[:, 0], cfg)          # (B, ...)
+
+    # conv state: append new, convolve the window of size K
+    win = jnp.concatenate(
+        [cache["conv"], xbc_new.astype(jnp.float32)[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    xs = xbc[:, :din].reshape(bsz, h, hp)
+    bvec = xbc[:, din:din + n]
+    cvec = xbc[:, din + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                   # (B,H)
+    hnew = cache["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs, bvec)
+    y = jnp.einsum("bn,bhpn->bhp", cvec, hnew) + xs * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32))[:, None, :],
+                 p["norm"], cfg.norm_eps)
+    out = quantized_matmul(y.astype(x.dtype), p["out_proj"], quant,
+                           cfg.quant_format)
+    return out, {"ssm": hnew, "conv": win[:, 1:, :]}

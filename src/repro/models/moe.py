@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with GShard-style grouped top-k dispatch.
+
+Tokens are routed in groups of ``moe_group_size``; each group's dispatch is
+an einsum against a (G, E, C) one-hot — the GSPMD-native formulation, so
+expert parallelism (experts sharded over the 'expert'/data axis) and expert
+tensor parallelism (d_ff over 'model') both fall out of sharding
+annotations. Capacity C = G * topk / E * capacity_factor (token dropping on
+overflow, standard for the assigned MoE configs).
+
+Router runs in f32 (standard practice; the paper quantizes GEMMs only).
+Expert FFN GEMMs go through the same M2XFP quantization modes as dense
+linears: qat fake-quants each expert's weights along the contraction dim,
+serve keeps them packed at 4.5 bits/element.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .numerics import einsum_f32acc
+from .quant import (
+    PackedWeight, decode_serving_weight, fake_quant_act, fake_quant_weight,
+    init_linear, ste,
+)
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_linear(ks[0], d, e, dtype=jnp.float32),
+        # expert weights stored contraction-dim first: (E, D, F) / (E, F, D)
+        "gate": init_linear(ks[1], d, (e, ff), dtype=dtype).transpose(1, 0, 2),
+        "up": init_linear(ks[2], d, (e, ff), dtype=dtype).transpose(1, 0, 2),
+        "down": init_linear(ks[3], ff, (e, d), dtype=dtype).transpose(1, 0, 2),
+    }
+
+
+def _capacity(group: int, topk: int, n_experts: int, factor: float) -> int:
+    c = int(group * topk / n_experts * factor)
+    return max(8, (c + 3) // 4 * 4)
+
+
+def _expert_matmul(xe: jax.Array, w, quant: str, fmt: str) -> jax.Array:
+    """(ng, E, C, K) x per-expert weights (E, K, F) -> (ng, E, C, F).
+
+    serve: w is a PackedWeight of the (K, E, N) transposed layout."""
+    if quant == "serve" and isinstance(w, PackedWeight):
+        wd = decode_serving_weight(w)                  # (K, E, N) bf16
+        xq = fake_quant_act(xe.astype(jnp.float32)).astype(jnp.bfloat16)
+        return einsum_f32acc("geck,kef->gecf", xq, wd).astype(xe.dtype)
+    if quant == "qat":
+        wq = ste(w, jax.vmap(lambda we: fake_quant_weight(
+            we.astype(jnp.float32), fmt))(w).astype(w.dtype))
+        xq = ste(xe, fake_quant_act(xe.astype(jnp.float32), fmt).astype(xe.dtype))
+        return einsum_f32acc("geck,ekf->gecf", xq, wq).astype(xe.dtype)
+    return einsum_f32acc("geck,ekf->gecf", xe, w).astype(xe.dtype)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg, quant: str = "none") -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, topk = cfg.n_experts, cfg.experts_per_token
+    g = min(cfg.moe_group_size, b * s)
+    ng = (b * s) // g
+    cap = _capacity(g, topk, e, cfg.moe_capacity_factor)
+
+    xt = x.reshape(ng, g, d)
+    logits = jnp.einsum("ngd,de->nge", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (ng, g, E)
+    top_p, top_i = jax.lax.top_k(probs, topk)                  # (ng, g, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)     # renormalize
+
+    # per-(token, slot) expert one-hot; position within expert counted
+    # slot-major (slot 0 of all tokens first) — GShard priority order
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)       # (ng, g, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(ng, topk * g, e)
+    pos_f = (jnp.cumsum(flat, axis=1) - flat) * flat
+    pos = pos_f.reshape(ng, topk, g, e).transpose(0, 2, 1, 3)  # (ng, g, k, E)
+    keep = (pos < cap).astype(jnp.float32) * onehot
+    pos_i = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+
+    # accumulate dispatch/combine per slot to bound the one-hot transient
+    dispatch = jnp.zeros((ng, g, e, cap), jnp.bfloat16)
+    combine = jnp.zeros((ng, g, e, cap), jnp.float32)
+    for kslot in range(topk):
+        oh = jax.nn.one_hot(pos_i[:, :, kslot], cap, dtype=jnp.float32)
+        oh = oh * keep[:, :, kslot, :, None]                   # (ng, g, E, C)
+        dispatch = dispatch + oh.astype(jnp.bfloat16)
+        combine = combine + oh * top_p[:, :, kslot, None, None]
+    dispatch = constrain(dispatch, ("batch", None, "expert", None))
+
+    xe = einsum_f32acc("ngec,ngd->necd", dispatch,
+                       xt.astype(jnp.bfloat16)).astype(x.dtype)
+    xe = constrain(xe, ("batch", "expert", None, "embed"))
+    h_g = _expert_matmul(xe, p["gate"], quant, cfg.quant_format)
+    h_u = _expert_matmul(xe, p["up"], quant, cfg.quant_format)
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    h = constrain(h, ("batch", "expert", None, "expert_mlp"))
+    ye = _expert_matmul(h, p["down"], quant, cfg.quant_format)  # (ng,E,C,D)
+    y = einsum_f32acc("ngec,necd->ngd", combine.astype(x.dtype),
+                      ye).astype(x.dtype)
+    # output annotation: lets GSPMD lower the cross-expert reduction as a
+    # reduce-scatter onto the token sharding instead of an all-reduce
+    y = constrain(y, ("batch", None, "embed"))
+    return y.reshape(b, s, d)

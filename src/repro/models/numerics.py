@@ -1,0 +1,45 @@
+"""Matmul dtype policy.
+
+TPU target: bf16 x bf16 -> f32-accumulated MXU dots (what the kernels and
+the roofline model assume). The XLA *CPU runtime* in this container cannot
+execute BF16xBF16=F32 dot thunks, so executed paths (tests, benchmarks,
+examples) upcast operands to f32. The dry-run — which only lowers+compiles —
+sets REPRO_FAITHFUL_DOTS=1 so the compiled HLO keeps true bf16 operand
+widths (the memory-roofline term depends on them).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["faithful_dots", "dot_f32acc", "einsum_f32acc"]
+
+
+def faithful_dots() -> bool:
+    return (os.environ.get("REPRO_FAITHFUL_DOTS", "") == "1"
+            or jax.default_backend() == "tpu")
+
+
+def bf16_tp_reduce() -> bool:
+    """Perf lever (EXPERIMENTS.md §Perf): emit bf16 dot outputs so the
+    GSPMD tensor-parallel partial-sum all-reduces move half the bytes
+    (standard production trade: bf16 reduction of activations)."""
+    return os.environ.get("REPRO_BF16_TP_REDUCE", "") == "1"
+
+
+def dot_f32acc(x: jax.Array, w: jax.Array, dims) -> jax.Array:
+    """dot_general with f32 accumulation; CPU-executable fallback."""
+    if faithful_dots():
+        out = jnp.bfloat16 if bf16_tp_reduce() else jnp.float32
+        return jax.lax.dot_general(x, w, dims, preferred_element_type=out)
+    return jax.lax.dot_general(
+        x.astype(jnp.float32), w.astype(jnp.float32), dims)
+
+
+def einsum_f32acc(eq: str, *args) -> jax.Array:
+    if faithful_dots():
+        out = jnp.bfloat16 if bf16_tp_reduce() else jnp.float32
+        return jnp.einsum(eq, *args, preferred_element_type=out)
+    return jnp.einsum(eq, *[a.astype(jnp.float32) for a in args])

@@ -1,0 +1,307 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with true recurrence, sequential scan).
+
+mLSTM cell (exponential gating, stabilized):
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = e^{logf+m_{t-1}-m_t} C_{t-1} + e^{logi-m_t} v k^T
+    n_t = e^{logf+m_{t-1}-m_t} n_{t-1} + e^{logi-m_t} k
+    h_t = (C_t q_t) / max(|n_t . q_t|, e^{-m_t})
+
+Training/prefill uses the chunkwise-parallel form (intra-chunk quadratic
+attention-like scores + inter-chunk (C, n, m) carry through lax.scan) so the
+backward pass does not store O(S) matrix states. Decode is the single-step
+recurrence (constant state -> `long_500k` capable).
+
+sLSTM keeps per-head recurrent weights (block-diagonal R) and therefore runs
+as a sequential lax.scan in both directions; its state is O(d), which is
+cheap even at 500k contexts.
+
+Projections go through ``quantized_matmul`` (M2XFP applies to GEMM
+operands); cell math stays f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .quant import init_linear, quantized_matmul
+
+MLSTM_CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    din = 2 * cfg.d_model
+    h = cfg.n_heads
+    return din, h, din // h
+
+
+def init_mlstm(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    din, h, p_ = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    blk = lambda k: (jax.random.normal(k, (h, p_, p_), jnp.float32)
+                     * p_ ** -0.5).astype(dtype)
+    return {
+        "up": init_linear(ks[0], d, 2 * din, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, din), jnp.float32) * 0.5)
+            .astype(jnp.float32),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "wq": blk(ks[2]), "wk": blk(ks[3]), "wv": blk(ks[4]),
+        "w_if": init_linear(ks[5], din, 2 * h, dtype=jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,)), jnp.linspace(3.0, 6.0, h)]).astype(jnp.float32),
+        "w_o": init_linear(ks[6], d, din, dtype=dtype),
+        "gn": jnp.ones((din,), jnp.float32),
+        "down": init_linear(ks[7], din, d, dtype=dtype),
+    }
+
+
+def _conv4(x, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(x.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out)
+
+
+def _mlstm_qkv(p, x_norm, cfg, quant):
+    """Shared front half: projections, conv, gates. x_norm: (B,S,D)."""
+    din, h, p_ = _mlstm_dims(cfg)
+    b, s, _ = x_norm.shape
+    up = quantized_matmul(x_norm, p["up"], quant, cfg.quant_format)
+    xin, z = jnp.split(up, 2, axis=-1)
+    xc = _conv4(xin, p["conv_w"], p["conv_b"])               # (B,S,din) f32
+    xch = xc.reshape(b, s, h, p_)
+    xinh = xin.astype(jnp.float32).reshape(b, s, h, p_)
+    q = jnp.einsum("bshp,hpq->bshq", xch, p["wq"].astype(jnp.float32))
+    k = jnp.einsum("bshp,hpq->bshq", xch, p["wk"].astype(jnp.float32)) \
+        * (p_ ** -0.5)
+    v = jnp.einsum("bshp,hpq->bshq", xinh, p["wv"].astype(jnp.float32))
+    gates = xc @ p["w_if"] + p["b_if"]                        # (B,S,2H)
+    logi = gates[..., :h]
+    logf = jax.nn.log_sigmoid(gates[..., h:])
+    o = jax.nn.sigmoid(
+        quantized_matmul(x_norm, p["w_o"], quant, cfg.quant_format)
+        .astype(jnp.float32))
+    return xin, z, q, k, v, logi, logf, o
+
+
+def _mlstm_cell_chunkwise(q, k, v, logi, logf):
+    """Chunkwise-parallel stabilized mLSTM. q/k/v: (B,S,H,P); gates (B,S,H).
+    Returns h (B,S,H,P) and final (C, n, m) state."""
+    b, s, h, p_ = q.shape
+    l = min(MLSTM_CHUNK, s)
+    nc = s // l
+    qc = q.reshape(b, nc, l, h, p_)
+    kc = k.reshape(b, nc, l, h, p_)
+    vc = v.reshape(b, nc, l, h, p_)
+    li = logi.reshape(b, nc, l, h)
+    lf = logf.reshape(b, nc, l, h)
+    fcum = jnp.cumsum(lf, axis=2)                             # F_t
+    g = li - fcum                                             # g_s = li_s - F_s
+    gmax_run = jax.lax.cummax(g, axis=2)                      # cummax_s<=t g_s
+    g_end = jnp.max(g, axis=2)                                # (B,nc,H)
+    f_end = fcum[:, :, -1]                                    # (B,nc,H)
+
+    # intra-chunk scores (computed once; combined with carry inside scan)
+    qk = jnp.einsum("bclhp,bcmhp->bclmh", qc, kc)             # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+
+    def chunk_step(carry, inp):
+        c_st, n_st, m_c = carry          # (B,H,P,P), (B,H,P), (B,H)
+        qcc, kcc, vcc, fc, gc, gmx, qkc, ge, fe = inp
+        mu = jnp.maximum(m_c[:, None], gmx)                   # (B,L,H)
+        # intra exponent for (t, s): F_t - F_s + li_s - m_t = g_s - mu_t
+        # (masked inside the exp: masked entries can be large-positive and
+        # an inf forward value NaNs the backward via inf * 0)
+        expo = gc[:, None, :, :] - mu[:, :, None, :]           # (B,L_t,L_s,H)
+        w_st = jnp.exp(jnp.where(mask[None, :, :, None], expo, -1e9))
+        num_intra = jnp.einsum("blmh,blmh,bmhp->blhp", qkc, w_st, vcc)
+        den_intra = jnp.einsum("blmh,blmh->blh", qkc, w_st)
+        # inter: carry state decayed by exp(F_t + m_c - m_t)
+        w_in = jnp.exp(m_c[:, None] - mu)                     # (B,L,H)
+        num_inter = jnp.einsum("blhp,bhpq->blhq", qcc, c_st) * w_in[..., None]
+        den_inter = jnp.einsum("blhp,bhp->blh", qcc, n_st) * w_in
+        m_t = fc + mu
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h_out = (num_intra + num_inter) / den[..., None]
+        # carry update to chunk end
+        m_next = fe + jnp.maximum(m_c, ge)
+        cd = jnp.exp(m_c + fe - m_next)                       # (B,H)
+        wk_end = jnp.exp(fe[:, None] + gc - m_next[:, None])  # (B,L,H)
+        c_new = c_st * cd[:, :, None, None] + jnp.einsum(
+            "blh,blhp,blhq->bhpq", wk_end, kcc, vcc)
+        n_new = n_st * cd[:, :, None] + jnp.einsum(
+            "blh,blhp->bhp", wk_end, kcc)
+        return (c_new, n_new, m_next), h_out
+
+    init = (jnp.zeros((b, h, p_, p_), jnp.float32),
+            jnp.zeros((b, h, p_), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), fcum.transpose(1, 0, 2, 3),
+          g.transpose(1, 0, 2, 3), gmax_run.transpose(1, 0, 2, 3),
+          qk.transpose(1, 0, 2, 3, 4), g_end.transpose(1, 0, 2),
+          f_end.transpose(1, 0, 2))
+    (c_f, n_f, m_f), hs = jax.lax.scan(chunk_step, init, xs)
+    hseq = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p_)
+    return hseq, {"C": c_f, "n": n_f, "m": m_f}
+
+
+def mlstm_forward(p, x, cfg, quant="none"):
+    """Full-sequence mLSTM block (pre-norm residual handled by caller).
+    x: (B,S,D) normalized input. Returns (out, cache)."""
+    din, h, p_ = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    xin, z, q, k, v, logi, logf, o = _mlstm_qkv(p, x, cfg, quant)
+    hseq, state = _mlstm_cell_chunkwise(q, k, v, logi, logf)
+    hflat = (hseq.reshape(b, s, din) * o)
+    hflat = rms_norm(hflat, p["gn"], cfg.norm_eps)
+    out = hflat.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = quantized_matmul(out, p["down"], quant, cfg.quant_format)
+    k_ = p["conv_w"].shape[0]
+    state["conv"] = xin.astype(jnp.float32)[:, s - (k_ - 1):, :]
+    return out, state
+
+
+def init_mlstm_cache(cfg, batch: int) -> dict:
+    din, h, p_ = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, p_, p_), jnp.float32),
+        "n": jnp.zeros((batch, h, p_), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, din), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x, cfg, cache, quant="none"):
+    """Single-token mLSTM step. x: (B,1,D) normalized."""
+    din, h, p_ = _mlstm_dims(cfg)
+    b = x.shape[0]
+    up = quantized_matmul(x, p["up"], quant, cfg.quant_format)[:, 0]
+    xin, z = jnp.split(up, 2, axis=-1)
+    win = jnp.concatenate(
+        [cache["conv"], xin.astype(jnp.float32)[:, None, :]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"])
+    xch = xc.reshape(b, h, p_)
+    xinh = xin.astype(jnp.float32).reshape(b, h, p_)
+    q = jnp.einsum("bhp,hpq->bhq", xch, p["wq"].astype(jnp.float32))
+    k = jnp.einsum("bhp,hpq->bhq", xch, p["wk"].astype(jnp.float32)) \
+        * (p_ ** -0.5)
+    v = jnp.einsum("bhp,hpq->bhq", xinh, p["wv"].astype(jnp.float32))
+    gates = xc @ p["w_if"] + p["b_if"]
+    logi, logf = gates[:, :h], jax.nn.log_sigmoid(gates[:, h:])
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    wf = jnp.exp(logf + cache["m"] - m_new)
+    wi = jnp.exp(logi - m_new)
+    c_new = cache["C"] * wf[..., None, None] + wi[..., None, None] * \
+        jnp.einsum("bhp,bhq->bhpq", k, v)
+    n_new = cache["n"] * wf[..., None] + wi[..., None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    hvec = (num / den[..., None]).reshape(b, din)
+    o = jax.nn.sigmoid(
+        quantized_matmul(x, p["w_o"], quant, cfg.quant_format)[:, 0]
+        .astype(jnp.float32))
+    hvec = rms_norm(hvec * o, p["gn"], cfg.norm_eps)
+    out = hvec[:, None, :].astype(x.dtype) * \
+        jax.nn.silu(z.astype(jnp.float32))[:, None, :].astype(x.dtype)
+    out = quantized_matmul(out, p["down"], quant, cfg.quant_format)
+    return out, {"C": c_new, "n": n_new, "m": m_new, "conv": win[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    p_ = d // h
+    ff = int(d * 4 / 3 + 63) // 64 * 64
+    ks = jax.random.split(key, 5)
+    return {
+        "w": init_linear(ks[0], d, 4 * d, dtype=dtype),          # z,i,f,o
+        "r": (jax.random.normal(ks[1], (4, h, p_, p_), jnp.float32)
+              * p_ ** -0.5).astype(jnp.float32),
+        "b": jnp.concatenate([
+            jnp.zeros((2 * d,)),
+            jnp.ones((d,)) * 3.0,                                # f bias
+            jnp.zeros((d,))]).astype(jnp.float32),
+        "gn": jnp.ones((d,), jnp.float32),
+        "ff_up": init_linear(ks[3], d, ff, dtype=dtype),
+        "ff_down": init_linear(ks[4], ff, d, dtype=dtype),
+    }
+
+
+def _slstm_step(p, cfg, carry, wx_t):
+    """One sLSTM timestep. carry: (c, n, h, m) each (B, d)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    p_ = d // nh
+    c, n, hprev, m = carry
+    hh = hprev.reshape(-1, nh, p_)
+    rec = jnp.stack([
+        jnp.einsum("bhp,hpq->bhq", hh, p["r"][j]) for j in range(4)
+    ], axis=1).reshape(-1, 4 * d)                            # (B, 4d)
+    pre = wx_t + rec + p["b"]
+    zt = jnp.tanh(pre[:, :d])
+    logi = pre[:, d:2 * d]
+    logf = jax.nn.log_sigmoid(pre[:, 2 * d:3 * d])
+    ot = jax.nn.sigmoid(pre[:, 3 * d:])
+    m_new = jnp.maximum(logf + m, logi)
+    wf = jnp.exp(logf + m - m_new)
+    wi = jnp.exp(logi - m_new)
+    c_new = wf * c + wi * zt
+    n_new = wf * n + wi
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, x, cfg, quant="none"):
+    """Full-sequence sLSTM block. x: (B,S,D) normalized. (out, cache)."""
+    b, s, d = x.shape
+    wx = quantized_matmul(x, p["w"], quant, cfg.quant_format) \
+        .astype(jnp.float32)                                  # (B,S,4d)
+    init = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((b, d), -1e30, jnp.float32),)
+
+    def step(carry, wx_t):
+        new = _slstm_step(p, cfg, carry, wx_t)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+    hseq = hs.transpose(1, 0, 2)                              # (B,S,d)
+    hseq = rms_norm(hseq, p["gn"], cfg.norm_eps).astype(x.dtype)
+    ff = quantized_matmul(hseq, p["ff_up"], quant, cfg.quant_format)
+    ff = jax.nn.gelu(ff.astype(jnp.float32)).astype(x.dtype)
+    out = quantized_matmul(ff, p["ff_down"], quant, cfg.quant_format)
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+
+def init_slstm_cache(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(p, x, cfg, cache, quant="none"):
+    """Single-token sLSTM step. x: (B,1,D) normalized."""
+    wx = quantized_matmul(x, p["w"], quant, cfg.quant_format)[:, 0] \
+        .astype(jnp.float32)
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(p, cfg, carry, wx)
+    hseq = rms_norm(h[:, None, :], p["gn"], cfg.norm_eps).astype(x.dtype)
+    ff = quantized_matmul(hseq, p["ff_up"], quant, cfg.quant_format)
+    ff = jax.nn.gelu(ff.astype(jnp.float32)).astype(x.dtype)
+    out = quantized_matmul(ff, p["ff_down"], quant, cfg.quant_format)
+    return out, {"c": c, "n": n, "h": h, "m": m}

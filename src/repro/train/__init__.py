@@ -1,0 +1,2 @@
+# Training substrate: from-scratch AdamW, LR schedules, gradient clipping,
+# gradient compression (top-k + int8, error feedback), train-step builder.

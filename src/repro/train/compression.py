@@ -1,0 +1,99 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+Two composable stages with error feedback (residual accumulation):
+  * top-k sparsification (keep the k largest-|g| entries per leaf)
+  * int8 quantization (symmetric per-leaf scale)
+
+At 1000+ node scale the inter-pod links are the slowest hop (DCN or
+long-haul ICI); compressing only the *cross-pod* reduction keeps in-pod
+gradients exact while cutting the slow-link traffic by
+(32/8 = 4x for int8) * (1/density for top-k). Error feedback makes the
+scheme unbiased-in-the-limit: what a step drops is re-injected next step.
+
+Integration: trainer.py runs the model under shard_map(auto={data, model})
+over the 'pod' axis; per-pod gradients are compressed, psum'd across pods,
+and decompressed (see make_train_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "init_error_feedback", "compress_decompress",
+           "compressed_psum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    int8: bool = True
+    topk_density: float = 1.0       # 1.0 = no sparsification
+    axis: str = "pod"               # mesh axis carrying the slow links
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quant_int8(x: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _topk_mask(x: jax.Array, density: float) -> jax.Array:
+    if density >= 1.0:
+        return jnp.ones_like(x, dtype=bool)
+    flat = jnp.abs(x).reshape(-1)
+    k = max(1, int(flat.shape[0] * density))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.abs(x) >= thresh
+
+
+def compress_decompress(g: jax.Array, err: jax.Array, cfg: CompressionConfig):
+    """Single-leaf compress->decompress with error feedback. Returns
+    (decompressed, new_err). Used for numerics tests and the psum path."""
+    x = g.astype(jnp.float32) + err
+    mask = _topk_mask(x, cfg.topk_density)
+    kept = jnp.where(mask, x, 0.0)
+    if cfg.int8:
+        q, s = _quant_int8(kept)
+        deq = q.astype(jnp.float32) * s
+    else:
+        deq = kept
+    return deq, x - deq
+
+
+def compressed_psum(grads, err_state, cfg: CompressionConfig,
+                    axis_name: str, n_pods: int):
+    """Cross-pod mean of gradients with compression + error feedback.
+
+    Runs inside shard_map over ``axis_name``. int8 payloads are summed as
+    int32 (exact for <= 2^23 pods) and rescaled with a max-reduced scale.
+    """
+    def one(g, err):
+        x = g.astype(jnp.float32) + err
+        mask = _topk_mask(x, cfg.topk_density)
+        kept = jnp.where(mask, x, 0.0)
+        if cfg.int8:
+            # shared scale across pods so the int8 sum is well-defined
+            local_amax = jnp.max(jnp.abs(kept))
+            amax = jax.lax.pmax(local_amax, axis_name)
+            scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+            q = jnp.clip(jnp.round(kept / scale), -127, 127).astype(jnp.int8)
+            summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            reduced = summed.astype(jnp.float32) * scale / n_pods
+            sent = q.astype(jnp.float32) * scale
+        else:
+            reduced = jax.lax.psum(kept, axis_name) / n_pods
+            sent = kept
+        return reduced.astype(g.dtype), x - sent
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))

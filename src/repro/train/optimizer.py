@@ -1,0 +1,98 @@
+"""AdamW + LR schedules + global-norm clipping, from scratch (no optax).
+
+Layout convention: params stored f32 ("master"); the forward pass casts
+matrix leaves to bf16 (see trainer). Optimizer state m/v are f32, sharded
+identically to their parameters (ZeRO-3 falls out of the param shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "warmup_cosine", "global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def warmup_cosine(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        t = (step - cfg.warmup_steps) / jnp.maximum(
+            cfg.total_steps - cfg.warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm,
+                                  0.1 + 0.9 * cos)
+    return sched
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig,
+                 schedule=None):
+    """One AdamW step. Decoupled weight decay on matrix (ndim >= 2) leaves.
+    Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = (schedule or warmup_cosine(cfg))(step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,15 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def heavy_tailed(rng, shape, df=4.0, ch_sigma=0.8):
+    """LLM-like tensor: student-t entries with per-channel log-normal scale."""
+    t = rng.standard_t(df=df, size=shape).astype(np.float32)
+    ch = np.exp(ch_sigma * rng.standard_normal((1, shape[-1]))).astype(
+        np.float32)
+    return t * ch

@@ -1,0 +1,131 @@
+"""Core format tests: grids, rounding, scale rules, baselines, M2XFP
+encode/decode, EBW accounting, and the paper's worked encoding example."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FP4_MAG_VALUES, FP6_MAG_VALUES, FP4_E2M1, FP6_E2M3, FP8_E4M3,
+    SCALE_RULES, format_ebw, quantize_act_m2xfp, quantize_fp4_fp16scale,
+    quantize_mxfp4, quantize_nvfp4, quantize_smx4, quantize_weight_m2xfp,
+    round_to_grid, shared_scale_exponent,
+)
+from repro.core.m2xfp import (
+    decode_act_m2xfp, decode_weight_m2xfp, elem_em_encode_parts,
+    encode_act_m2xfp, encode_weight_m2xfp,
+)
+from conftest import heavy_tailed
+
+
+def test_grids():
+    assert np.allclose(FP4_MAG_VALUES, [0, .5, 1, 1.5, 2, 3, 4, 6])
+    assert float(FP6_MAG_VALUES[-1]) == 7.5
+    assert len(FP6_MAG_VALUES) == 32
+    assert FP4_E2M1.max_pow2 == 4.0 and FP4_E2M1.max_value == 6.0
+    assert FP8_E4M3.max_value == 448.0
+
+
+@pytest.mark.parametrize("v,expect", [
+    (1.75, 2.0), (1.25, 1.0), (2.5, 2.0), (3.5, 4.0), (5.0, 4.0),
+    (7.0, 6.0), (100.0, 6.0), (0.25, 0.0), (0.26, 0.5), (-2.5, -2.0),
+])
+def test_fp4_rtne(v, expect):
+    assert float(round_to_grid(jnp.float32(v), FP4_E2M1)) == expect
+
+
+def test_fp6_grid_roundtrip():
+    # every FP6 grid point is a fixed point of rounding
+    g = jnp.asarray(FP6_MAG_VALUES)
+    assert jnp.all(round_to_grid(g, FP6_E2M3) == g)
+
+
+def test_scale_rules_floor_vs_ceil():
+    # floor: amax/S in [4, 8); ceil: amax/S <= 6 (no clipping)
+    amax = jnp.asarray([0.1, 1.0, 5.0, 6.0, 7.0, 100.0])
+    e_floor = shared_scale_exponent(amax, "floor")
+    e_ceil = shared_scale_exponent(amax, "ceil")
+    sf = jnp.exp2(e_floor.astype(jnp.float32))
+    sc = jnp.exp2(e_ceil.astype(jnp.float32))
+    assert jnp.all((amax / sf >= 4) & (amax / sf < 8))
+    assert jnp.all(amax / sc <= 6.0 + 1e-6)
+    # rtne == ceil for FP4 (paper Sec. 6.4)
+    assert jnp.array_equal(e_ceil, shared_scale_exponent(amax, "rtne"))
+
+
+def test_all_scale_rules_run():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)),
+                    dtype=jnp.float32)
+    for rule in SCALE_RULES:
+        dq = quantize_mxfp4(x, rule=rule)
+        assert dq.shape == x.shape
+        assert not jnp.any(jnp.isnan(dq))
+
+
+def test_paper_encoding_example():
+    """Paper Sec. 4.4: FP4 value 4 -> decode candidates {3.75, 4, 4.5, 5};
+    values in (3.5, 3.625) suffer the single dropped-candidate rounding."""
+    xg = jnp.asarray([[[4.0] + [0.1] * 7]])      # one subgroup of 8
+    s = jnp.ones((1, 1, 1))
+    for orig, expect in [(3.8, 3.75), (4.0, 4.0), (4.4, 4.5), (4.9, 5.0),
+                         (3.55, 3.75),   # dropped -2 candidate (paper's case)
+                         (5.2, 5.5)]:    # 5.2 RTNEs to FP4=6; clamped up
+        xg2 = xg.at[0, 0, 0].set(orig)
+        _, _, v6, meta, c4t = elem_em_encode_parts(xg2, s, 8)
+        assert float(v6[0, 0, 0]) == expect, (orig, float(v6[0, 0, 0]))
+
+
+def test_top1_lowest_index_tiebreak():
+    # two elements with identical FP4 magnitude: lowest index refined
+    xg = jnp.asarray([[[3.9, 4.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1]]])
+    s = jnp.ones((1, 1, 1))
+    _, onehot, _, _, _ = elem_em_encode_parts(xg, s, 8)
+    oh = onehot.reshape(-1)
+    assert float(oh[0]) == 1.0 and float(jnp.sum(oh)) == 1.0
+
+
+def test_pack_roundtrip_matches_fake_quant(rng):
+    x = jnp.asarray(heavy_tailed(rng, (64, 256)))
+    assert jnp.array_equal(decode_act_m2xfp(encode_act_m2xfp(x)),
+                           quantize_act_m2xfp(x))
+    assert jnp.array_equal(decode_weight_m2xfp(encode_weight_m2xfp(x)),
+                           quantize_weight_m2xfp(x))
+
+
+def test_packed_footprint_is_4p5_bits(rng):
+    x = jnp.asarray(heavy_tailed(rng, (32, 128)))
+    p = encode_act_m2xfp(x)
+    assert p.nbytes_per_elem * 8 == 4.5
+    pw = encode_weight_m2xfp(x)
+    assert pw.nbytes_per_elem * 8 == 4.5
+
+
+def test_ebw_values():
+    assert format_ebw("mxfp4") == 4.25
+    assert format_ebw("nvfp4") == 4.5
+    assert format_ebw("m2xfp") == 4.5
+    assert format_ebw("smx4") == 4.0
+    assert format_ebw("m2nvfp4") == 5.0
+
+
+def test_error_ordering_heavy_tailed(rng):
+    """Tbl. 2/3 qualitative ordering on LLM-like tensors: every M2XFP
+    variant and NVFP4 beat MXFP4; SMX4 is worst. (The m2xfp-vs-nvfp4 margin
+    is a model-level claim at matched EBW — asserted by the accuracy-proxy
+    benchmark, not per-tensor.)"""
+    x = jnp.asarray(heavy_tailed(rng, (256, 1024)))
+    mse = lambda f: float(jnp.mean((f(x) - x) ** 2))
+    m_m2w = mse(quantize_weight_m2xfp)
+    m_m2a = mse(quantize_act_m2xfp)
+    m_nv = mse(quantize_nvfp4)
+    m_mx = mse(quantize_mxfp4)
+    m_smx = mse(quantize_smx4)
+    assert m_m2w < m_mx and m_m2a < m_mx and m_nv < m_mx
+    assert m_mx < m_smx
+
+
+def test_weight_adaptive_beats_fixed(rng):
+    x = jnp.asarray(heavy_tailed(rng, (128, 512)))
+    ada = float(jnp.mean((quantize_weight_m2xfp(x, adaptive=True) - x) ** 2))
+    fix = float(jnp.mean((quantize_weight_m2xfp(x, adaptive=False) - x) ** 2))
+    assert ada <= fix + 1e-9

@@ -1,0 +1,60 @@
+"""Loop-aware HLO analyzer: exact FLOPs on a known scanned matmul."""
+import os
+import subprocess
+import sys
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis.hlo import parse_bytes_of_shape
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_parse_bytes():
+    assert parse_bytes_of_shape("bf16[8,512]{1,0}") == 8 * 512 * 2
+    assert parse_bytes_of_shape("(f32[2,2], u8[4])") == 16 + 4
+    assert parse_bytes_of_shape("pred[]") == 1
+    assert parse_bytes_of_shape("s32[10]") == 40
+
+
+@pytest.mark.slow
+def test_flops_exact_under_scan():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.analysis.hlo import analyze_hlo
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        L, D, B = 7, 256, 64
+
+        def step(ws, x):
+            def body(h, w):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, x, ws)
+            return h.sum()
+
+        ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+        xs = jax.ShapeDtypeStruct((B, D), jnp.float32)
+        with mesh:
+            f = jax.jit(step, in_shardings=(
+                NamedSharding(mesh, P(None, "data", "model")),
+                NamedSharding(mesh, P("data", None))))
+            comp = f.lower(ws, xs).compile()
+        a = analyze_hlo(comp.as_text())
+        expected = 2 * B * D * D * L / 8
+        print(json.dumps({"ratio": a.flops / expected,
+                          "trips": list(a.loop_trips.values())}))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    r = json.loads(out.stdout.strip().splitlines()[-1])
+    assert abs(r["ratio"] - 1.0) < 1e-6
+    assert 7 in r["trips"]

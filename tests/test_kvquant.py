@@ -1,0 +1,60 @@
+"""M2XFP KV-cache quantization (paper Sec. 6.4): roundtrip error bounds,
+footprint, and decode consistency vs the bf16 cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.kvquant import kv_decode, kv_encode, kv_cache_spec
+from repro.models.model import decode_step, init_caches, init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_kv_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 7, 4, 64)).astype(np.float32))
+    dq = kv_decode(kv_encode(x))
+    # Sg-EM fixed: error bounded by one FP4 step at the group scale
+    xg = x.reshape(-1, 32)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    err = jnp.abs(dq.astype(jnp.float32).reshape(-1, 32) - xg)
+    assert bool(jnp.all(err <= 0.5 * amax + 1e-6))
+    # relative scale: FP4-level
+    rel = float(jnp.max(err) / jnp.max(jnp.abs(x)))
+    assert rel < 0.2
+
+
+def test_kv_footprint_is_4p5_bits():
+    spec = kv_cache_spec(batch=2, w=16, nkv=4, hd=64)
+    total_bits = 8 * sum(np.prod(v.shape) * v.dtype.itemsize
+                         for v in spec.values())
+    assert total_bits == 4.5 * (2 * 16 * 4 * 64)
+
+
+def test_decode_with_quantized_cache_tracks_bf16_cache():
+    cfg = dataclasses.replace(smoke_config("qwen3-8b"), head_dim=32)
+    qcfg = dataclasses.replace(cfg, kv_quant="m2xfp")
+    params = init_params(KEY, cfg)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+
+    def run(c):
+        caches = init_caches(c, 2, 8)
+        step = jax.jit(lambda p, b, cc, i: decode_step(p, c, b, cc, i))
+        outs = []
+        for t in range(8):
+            lg, caches = step(params, {"tokens": toks[:, t:t + 1]}, caches,
+                              jnp.int32(t))
+            outs.append(lg)
+        return jnp.concatenate(outs, axis=1).astype(jnp.float32)
+
+    base = run(cfg)
+    quant = run(qcfg)
+    assert not bool(jnp.any(jnp.isnan(quant)))
+    a, b = base.ravel(), quant.ravel()
+    corr = float(jnp.corrcoef(jnp.stack([a, b]))[0, 1])
+    assert corr > 0.9, corr

@@ -1,0 +1,48 @@
+"""Pipeline parallelism: GPipe schedule == sequential stage application."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.launch.mesh import make_test_mesh
+        from repro.distributed.pipeline import pipeline_apply
+
+        mesh = make_test_mesh((4, 2), ("pipe", "model"))
+        n_stages, n_micro, mb, d = 4, 6, 8, 32
+        rng = np.random.default_rng(0)
+        ws = jnp.asarray(rng.standard_normal((n_stages, d, d)) * d ** -0.5,
+                         dtype=jnp.float32)
+        x = jnp.asarray(rng.standard_normal((n_micro, mb, d)),
+                        dtype=jnp.float32)
+
+        def stage(w, h):
+            return jnp.tanh(h @ w)
+
+        out = pipeline_apply(stage, ws, x, mesh, n_stages)
+
+        ref = x
+        for i in range(n_stages):
+            ref = jax.vmap(lambda h: stage(ws[i], h))(ref)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print(json.dumps({"err": err}))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["err"] < 1e-5, out

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (
+    FP4_E2M1, FP6_E2M3, quantize_act_m2xfp, quantize_mxfp4,
+    quantize_weight_m2xfp, round_to_grid, shared_scale_exponent,
+)
+from repro.core.m2xfp import encode_act_m2xfp, decode_act_m2xfp
+
+_f32 = hnp.arrays(
+    np.float32, st.tuples(st.integers(1, 4), st.just(64)),
+    elements=st.floats(-1e4, 1e4, width=32, allow_nan=False,
+                       allow_infinity=False))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_f32)
+def test_quantize_idempotent(x):
+    """Quantization is a projection: q(q(x)) == q(x)."""
+    xq = quantize_mxfp4(jnp.asarray(x))
+    assert jnp.array_equal(quantize_mxfp4(xq), xq)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_f32)
+def test_m2xfp_act_near_idempotent(x):
+    """Elem-EM fake-quant is idempotent up to ONE FP6 step: a refined FP6
+    value can re-round into the next FP4 bin whose {-1..+2} decode set
+    clamps it (e.g. 0.75 -> FP4 1.0 -> 0.875). The *packed* roundtrip is
+    exact (test_pack_decode_roundtrip); re-quantizing a dequantized tensor
+    is not a pipeline operation."""
+    xj = jnp.asarray(x)
+    q1 = quantize_act_m2xfp(xj)
+    q2 = quantize_act_m2xfp(q1)
+    xg = q1.reshape(-1, 32)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    s = jnp.exp2(shared_scale_exponent(amax, "floor").astype(jnp.float32))
+    drift = jnp.abs(q2.reshape(-1, 32) - xg)
+    assert bool(jnp.all(drift <= 0.25 * s + 1e-7))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_f32)
+def test_mxfp4_error_bound(x):
+    """|x - q(x)| <= max(half grid step at |x|, clip error) * scale; the
+    coarse bound ulp = 2 * scale covers every grid interval of E2M1."""
+    xj = jnp.asarray(x)
+    dq = quantize_mxfp4(xj)
+    xg = xj.reshape(-1, 32)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    s = jnp.exp2(shared_scale_exponent(amax, "floor").astype(jnp.float32))
+    err = jnp.abs((dq.reshape(-1, 32) - xg))
+    # elements within +-6s: err <= 1s (half of largest step 2s);
+    # clipped elements (floor rule allows amax < 8s): err < 2s
+    assert bool(jnp.all(err <= 2.0 * s + 1e-6))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_f32)
+def test_sign_preservation(x):
+    dq = quantize_act_m2xfp(jnp.asarray(x))
+    assert bool(jnp.all(jnp.asarray(x) * dq >= 0))          # no sign flips
+
+
+@settings(max_examples=30, deadline=None)
+@given(_f32)
+def test_m2xfp_never_worse_than_mxfp4_groupwise(x):
+    """Elem-EM refinement only moves the top-1 closer to its true value:
+    group MSE(m2xfp) <= group MSE(mxfp4) + tiny slack for the dropped
+    -2 candidate."""
+    xj = jnp.asarray(x)
+    base = jnp.mean((quantize_mxfp4(xj) - xj) ** 2)
+    m2 = jnp.mean((quantize_act_m2xfp(xj) - xj) ** 2)
+    assert float(m2) <= float(base) * 1.001 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(_f32)
+def test_pack_decode_roundtrip(x):
+    xj = jnp.asarray(x)
+    assert jnp.array_equal(decode_act_m2xfp(encode_act_m2xfp(xj)),
+                           quantize_act_m2xfp(xj))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e-20, 1e20, allow_nan=False, allow_infinity=False))
+def test_scale_monotone(a):
+    """Shared scale exponent is monotone in amax."""
+    e1 = int(shared_scale_exponent(jnp.float32(a), "floor"))
+    e2 = int(shared_scale_exponent(jnp.float32(a * 2), "floor"))
+    assert e2 >= e1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-7.5, 7.5, allow_nan=False))
+def test_fp6_round_is_nearest(v):
+    from repro.core import FP6_MAG_VALUES
+    got = float(round_to_grid(jnp.float32(v), FP6_E2M3))
+    grid = np.asarray(FP6_MAG_VALUES, dtype=np.float64)
+    grid = np.concatenate([-grid[::-1], grid])
+    best = float(grid[np.argmin(np.abs(grid - v))])
+    assert abs(got - v) <= abs(best - v) + 1e-7
+
+
+@settings(max_examples=15, deadline=None)
+@given(_f32, st.sampled_from([1, 2, 4]))
+def test_weight_scale_multiplier_search_optimal(x, bits_unused):
+    """Sg-EM fixed-scale pick is at least as good as any single k."""
+    from repro.core.m2xfp import sg_em_dequant_with_scale
+    from repro.core.packing import group_reshape
+    from repro.core.dtypes import round_to_grid as rtg
+    xg = group_reshape(jnp.asarray(x), 32)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    s = jnp.exp2(shared_scale_exponent(amax, "floor").astype(jnp.float32))
+    best = sg_em_dequant_with_scale(xg, s, 8, bits=2, adaptive=False)
+    err_best = float(jnp.sum((best - xg) ** 2))
+    for k in range(4):
+        sk = (1 + k / 4) * s
+        dq = rtg(xg / sk, FP4_E2M1) * sk
+        assert err_best <= float(jnp.sum((dq - xg) ** 2)) + 1e-5

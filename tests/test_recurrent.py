@@ -1,0 +1,116 @@
+"""Recurrence correctness: chunked-parallel forms == sequential decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import mamba2 as mb
+from repro.models import xlstm as xl
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="ssm", n_layers=1, d_model=64, n_heads=4,
+                n_kv_heads=4, d_ff=0, vocab_size=128, ssm_state=16,
+                ssm_head_dim=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_mamba2_forward_equals_decode():
+    cfg = _cfg()
+    p = mb.init_mamba2(KEY, cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 256, 64)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    y, state = jax.jit(lambda p, x: mb.mamba2_forward(p, x, cfg))(p, x)
+    cache = mb.init_mamba2_cache(cfg, 2)
+    step = jax.jit(lambda p, x, c: mb.mamba2_decode(p, x, cfg, c))
+    ys = []
+    for t in range(256):
+        yt, cache = step(p, x[:, t:t + 1], cache)
+        ys.append(yt)
+    yseq = jnp.concatenate(ys, axis=1)
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                - yseq.astype(jnp.float32))))
+    assert err < 0.05, err
+    assert float(jnp.max(jnp.abs(state["ssm"] - cache["ssm"]))) < 1e-3
+    np.testing.assert_allclose(np.asarray(state["conv"]),
+                               np.asarray(cache["conv"]), atol=1e-5)
+
+
+def test_mlstm_chunkwise_equals_sequential():
+    rng = np.random.default_rng(1)
+    B, S, H, P = 2, 256, 3, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(np.float32)
+                    ) * P ** -0.5
+    v = jnp.asarray(rng.standard_normal((B, S, H, P)).astype(np.float32))
+    logi = jnp.asarray(rng.standard_normal((B, S, H)).astype(np.float32))
+    logf = jnp.asarray(np.log(1 / (1 + np.exp(
+        -rng.standard_normal((B, S, H)) - 2))).astype(np.float32))
+
+    def naive():
+        C = jnp.zeros((B, H, P, P))
+        n = jnp.zeros((B, H, P))
+        m = jnp.full((B, H), -1e30)
+        hs = []
+        for t in range(S):
+            m_new = jnp.maximum(logf[:, t] + m, logi[:, t])
+            wf = jnp.exp(logf[:, t] + m - m_new)
+            wi = jnp.exp(logi[:, t] - m_new)
+            C = C * wf[..., None, None] + wi[..., None, None] * jnp.einsum(
+                "bhp,bhq->bhpq", k[:, t], v[:, t])
+            n = n * wf[..., None] + wi[..., None] * k[:, t]
+            m = m_new
+            num = jnp.einsum("bhp,bhpq->bhq", q[:, t], C)
+            den = jnp.maximum(
+                jnp.abs(jnp.einsum("bhp,bhp->bh", q[:, t], n)),
+                jnp.exp(-m))
+            hs.append(num / den[..., None])
+        return jnp.stack(hs, axis=1), C, n, m
+
+    h_ref, C_ref, n_ref, m_ref = naive()
+    h_ck, st = xl._mlstm_cell_chunkwise(q, k, v, logi, logf)
+    assert float(jnp.max(jnp.abs(h_ck - h_ref))) < 1e-3
+    assert float(jnp.max(jnp.abs(st["C"] - C_ref))) < 1e-4
+    assert float(jnp.max(jnp.abs(st["m"] - m_ref))) < 1e-4
+
+
+def test_mlstm_block_forward_equals_decode():
+    cfg = _cfg(n_heads=2)
+    p = xl.init_mlstm(KEY, cfg)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 64, 64)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    y, _ = jax.jit(lambda p, x: xl.mlstm_forward(p, x, cfg))(p, x)
+    cache = xl.init_mlstm_cache(cfg, 2)
+    step = jax.jit(lambda p, x, c: xl.mlstm_decode(p, x, cfg, c))
+    ys = []
+    for t in range(64):
+        yt, cache = step(p, x[:, t:t + 1], cache)
+        ys.append(yt)
+    yseq = jnp.concatenate(ys, axis=1)
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                - yseq.astype(jnp.float32))))
+    assert err < 0.08, err
+
+
+def test_slstm_block_forward_equals_decode():
+    cfg = _cfg(n_heads=4)
+    p = xl.init_slstm(KEY, cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 48, 64)).astype(np.float32)
+                    ).astype(jnp.bfloat16)
+    y, _ = jax.jit(lambda p, x: xl.slstm_forward(p, x, cfg))(p, x)
+    cache = xl.init_slstm_cache(cfg, 2)
+    step = jax.jit(lambda p, x, c: xl.slstm_decode(p, x, cfg, c))
+    ys = []
+    for t in range(48):
+        yt, cache = step(p, x[:, t:t + 1], cache)
+        ys.append(yt)
+    yseq = jnp.concatenate(ys, axis=1)
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                - yseq.astype(jnp.float32))))
+    assert err < 0.08, err

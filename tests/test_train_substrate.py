@@ -1,0 +1,246 @@
+"""Optimizer, data pipeline, checkpointing, compression, straggler tests."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_state, \
+    save_state
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.distributed.straggler import StragglerMonitor
+from repro.train.compression import CompressionConfig, compress_decompress, \
+    init_error_feedback
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, \
+    clip_by_global_norm, global_norm, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.1,
+                      clip_norm=1e9, warmup_steps=0, total_steps=10)
+    rng = np.random.default_rng(0)
+    p0 = rng.standard_normal((4, 8)).astype(np.float32)
+    g = rng.standard_normal((4, 8)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    opt = adamw_init(params)
+    sched = lambda s: jnp.float32(cfg.lr)
+    new_p, new_opt, _ = adamw_update(params, {"w": jnp.asarray(g)}, opt,
+                                     cfg, sched)
+    # numpy reference, step 1
+    m = 0.1 * g
+    v = 0.01 * g * g
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.99)
+    ref = p0 - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.1 * p0)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref, rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert abs(float(norm) - np.sqrt(90)) < 1e-4
+
+
+def test_warmup_cosine_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    s = warmup_cosine(cfg)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert abs(float(s(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(s(jnp.int32(100))) < float(s(jnp.int32(50)))
+
+
+def _tiny_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="tiny", family="dense", n_layers=4, d_model=128,
+                       n_heads=4, n_kv_heads=4, d_ff=384, vocab_size=256,
+                       remat=False)
+
+
+def test_training_loss_decreases():
+    """End-to-end: tiny LM on the synthetic motif stream learns."""
+    from repro.models.model import init_params, loss_fn
+    cfg = _tiny_cfg()
+    # recipe verified to cross the motif-copying phase transition ~step 200
+    data = SyntheticLM(DataConfig(batch=16, seq=128, vocab=256, seed=7,
+                                  motif_len=12, noise=0.05))
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=300,
+                       weight_decay=0.01)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, g = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+        params, opt, _ = adamw_update(params, g, opt, ocfg)
+        return params, opt, loss
+
+    losses = []
+    for i in range(300):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        params, opt, loss = step(params, opt, b)
+        losses.append(float(loss))
+    assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:5]), losses[::30]
+
+
+def test_microbatch_grads_match_full_batch():
+    from repro.models.model import init_params
+    from repro.train.trainer import _grads_and_loss
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 256, (8, 64)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 256, (8, 64)), jnp.int32)}
+    l1, g1 = jax.jit(lambda p, b: _grads_and_loss(p, cfg, b, 1))(params, batch)
+    l4, g4 = jax.jit(lambda p, b: _grads_and_loss(p, cfg, b, 4))(params, batch)
+    assert abs(float(l1) - float(l4)) < 5e-3
+    rel = [float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(a)) + 1e-9))
+           for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4))]
+    assert max(rel) < 0.05, max(rel)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_host_sharded():
+    base = dict(batch=8, seq=32, vocab=128, seed=3)
+    full = SyntheticLM(DataConfig(**base))
+    b0 = full.batch_at(5)
+    b0b = full.batch_at(5)
+    np.testing.assert_array_equal(b0["tokens"], b0b["tokens"])
+    # two hosts partition the global batch exactly
+    h0 = SyntheticLM(DataConfig(**base, host_id=0, num_hosts=2)).batch_at(5)
+    h1 = SyntheticLM(DataConfig(**base, host_id=1, num_hosts=2)).batch_at(5)
+    np.testing.assert_array_equal(
+        np.concatenate([h0["tokens"], h1["tokens"]]), b0["tokens"])
+
+
+def test_prefetcher_orders_batches():
+    src = SyntheticLM(DataConfig(batch=2, seq=16, vocab=64, seed=0))
+    pf = Prefetcher(src, start_step=3, depth=2)
+    try:
+        s0, b0 = next(pf)
+        s1, b1 = next(pf)
+        assert (s0, s1) == (3, 4)
+        np.testing.assert_array_equal(b0["tokens"], src.batch_at(3)["tokens"])
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 4)),
+                                        dtype=jnp.float32)},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    st = _state()
+    save_state(str(tmp_path), 10, st, extra={"data_step": 10})
+    out, extra = restore_state(str(tmp_path), st)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+    assert extra["data_step"] == 10
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    st = _state()
+    for s in (1, 2, 3, 4, 5):
+        save_state(str(tmp_path), s, st, keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    from repro.checkpoint.checkpoint import all_steps
+    assert all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_checkpoint_ignores_incomplete(tmp_path):
+    st = _state()
+    save_state(str(tmp_path), 1, st)
+    # simulate a crash mid-write: tmp dir + manifest-less dir
+    os.makedirs(tmp_path / "step_0000000002.tmp")
+    os.makedirs(tmp_path / "step_0000000003")
+    assert latest_step(str(tmp_path)) == 1
+    out, _ = restore_state(str(tmp_path), st)
+    assert int(out["opt"]["step"]) == 7
+
+
+def test_checkpoint_manager_async_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=2, keep=2)
+    st = _state()
+    assert not mgr.maybe_save(1, st)
+    assert mgr.maybe_save(2, st, extra={"data_step": 2})
+    mgr.wait()
+    got, extra, step = mgr.resume(st)
+    assert step == 2 and extra["data_step"] == 2
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_converges():
+    """With error feedback, the *cumulative* compressed sum tracks the
+    cumulative true sum (residual stays bounded)."""
+    cfg = CompressionConfig(enabled=True, int8=True, topk_density=0.25)
+    rng = np.random.default_rng(0)
+    g_true = jnp.zeros((256,))
+    g_sent = jnp.zeros((256,))
+    err = jnp.zeros((256,))
+    for i in range(50):
+        g = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+        sent, err = compress_decompress(g, err, cfg)
+        g_true = g_true + g
+        g_sent = g_sent + sent
+    resid = float(jnp.linalg.norm(g_true - g_sent))
+    assert resid == pytest.approx(float(jnp.linalg.norm(err)), rel=1e-4)
+    assert resid < 0.15 * float(jnp.linalg.norm(g_true)) + 5.0
+
+
+def test_int8_quant_bounded_error():
+    cfg = CompressionConfig(enabled=True, int8=True, topk_density=1.0)
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    err0 = jnp.zeros((512,))
+    deq, err = compress_decompress(g, err0, cfg)
+    amax = float(jnp.max(jnp.abs(g)))
+    assert float(jnp.max(jnp.abs(deq - g))) <= amax / 127.0 * 0.51 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_monitor_flags_sustained_slowness():
+    events = []
+    mon = StragglerMonitor(threshold=2.0, patience=2,
+                           on_straggle=lambda s, dt: events.append(s))
+    class FakeTime:
+        t = 0.0
+    times = [0.1] * 5 + [0.5, 0.5] + [0.1] * 3
+    import repro.distributed.straggler as sg
+    orig = sg.time.monotonic
+    seq = iter(np.cumsum([0] + [t for t in times for _ in (0, 1)][:len(times) * 2]))
+    try:
+        vals = []
+        acc = 0.0
+        for t in times:
+            vals += [acc, acc + t]
+            acc += t
+        it = iter(vals)
+        sg.time.monotonic = lambda: next(it)
+        for i in range(len(times)):
+            mon.step_start()
+            mon.step_end(i)
+    finally:
+        sg.time.monotonic = orig
+    assert events, "sustained straggler not flagged"
