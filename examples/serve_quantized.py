@@ -1,74 +1,72 @@
-"""Serving driver: load (or train) a model, pack weights to M2XFP
-(4.5 bits/element resident), and serve batched autoregressive generation
-against the ring-buffer KV cache — the paper's deployment path.
+"""Serving driver — thin wrapper over the packed-weight engine.
+
+Pipeline (the paper's deployment path, repro.serve):
+  1. offline prequantization: bf16 params -> packed Sg-EM streams
+     (4.5 bits/element resident; weights never rematerialize in bf16),
+     round-tripped through a packed checkpoint;
+  2. continuous-batching decode: requests with different prompt lengths
+     share the batch, admitted/evicted per slot while the engine keeps
+     stepping (quantized KV-cache pages with --kv-quant).
 
     PYTHONPATH=src python examples/serve_quantized.py --tokens 16
 """
 import argparse
-import dataclasses
-import time
+import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
-from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.config import ModelConfig
-from repro.models.model import (
-    decode_step, forward, init_caches, init_params, pack_params_for_serving,
+from repro.models.model import init_params
+from repro.serve import (
+    ServeEngine, load_packed_checkpoint, prequantize_params,
+    save_packed_checkpoint, tree_nbytes,
 )
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--kv-quant", action="store_true")
     args = ap.parse_args()
 
     cfg = ModelConfig(
         name="serve-lm", family="dense", n_layers=args.layers,
         d_model=args.d_model, n_heads=args.d_model // 32,
         n_kv_heads=args.d_model // 64, d_ff=3 * args.d_model,
-        vocab_size=4096, remat=False)
+        vocab_size=4096, remat=False, quant="serve",
+        kv_quant="m2xfp" if args.kv_quant else "none")
+
     params = init_params(jax.random.PRNGKey(0), cfg)
+    packed = prequantize_params(params, cfg)
+    print(f"weights: {tree_nbytes(params) / 2**20:.1f} MiB bf16 -> "
+          f"{tree_nbytes(packed) / 2**20:.1f} MiB packed M2XFP")
 
-    scfg = dataclasses.replace(cfg, quant="serve")
-    packed = pack_params_for_serving(params, scfg)
+    # the engine loads from the packed checkpoint, proving bf16 weights are
+    # not needed at serving time
+    with tempfile.TemporaryDirectory() as ckdir:
+        save_packed_checkpoint(ckdir, packed, cfg)
+        served, _ = load_packed_checkpoint(ckdir, cfg)
 
-    def nbytes(t):
-        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
-    print(f"weights: {nbytes(params)/2**20:.1f} MiB bf16 -> "
-          f"{nbytes(packed)/2**20:.1f} MiB packed M2XFP")
+    rng = np.random.default_rng(5)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in rng.integers(args.prompt_len // 2,
+                                     args.prompt_len + 1, args.requests)]
+    eng = ServeEngine(served, cfg, n_slots=args.slots,
+                      max_len=args.prompt_len + args.tokens)
+    outputs = eng.generate(prompts, max_new_tokens=args.tokens)
 
-    data = SyntheticLM(DataConfig(batch=args.batch, seq=args.prompt_len,
-                                  vocab=cfg.vocab_size, seed=5))
-    prompts = jnp.asarray(data.batch_at(0)["tokens"])
-    max_len = args.prompt_len + args.tokens
-
-    # prefill by teacher-forcing the prompt through decode steps (simple,
-    # exercises the exact serving path; a production prefill uses forward())
-    caches = init_caches(scfg, args.batch, max_len)
-    step = jax.jit(lambda p, b, c, i: decode_step(p, scfg, b, c, i))
-    tok = prompts[:, :1]
-    generated = [tok]
-    t0 = time.perf_counter()
-    for t in range(max_len - 1):
-        logits, caches = step(packed, {"tokens": tok}, caches, jnp.int32(t))
-        if t + 1 < args.prompt_len:
-            tok = prompts[:, t + 1:t + 2]
-        else:
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    out = jnp.concatenate(generated, axis=1)
-    print(f"generated {args.tokens} tokens x {args.batch} seqs in "
-          f"{dt:.2f}s ({args.batch * (max_len-1) / dt:.1f} tok/s on CPU)")
-    print("sample row:", np.asarray(out[0, -args.tokens:]))
+    s = eng.stats
+    print(f"served {len(prompts)} requests on {args.slots} slots in "
+          f"{s.steps} steps / {s.wall_s:.2f}s — "
+          f"{s.tokens_per_sec:.1f} tok/s on {jax.default_backend()}, "
+          f"slot occupancy {s.occupancy:.2f}")
+    print("sample output:", outputs[0])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Fail if documentation code snippets drift from the shipped API.
+
+Extracts every fenced ```python block from README.md and docs/*.md and
+executes each file's blocks, in order, in one fresh interpreter per file
+(so a snippet may build on the previous one, like a reader following
+along). A block whose info string is anything other than exactly
+``python`` (e.g. ``python skip``, ``bash``, ``text``) is not executed.
+
+    PYTHONPATH=src python scripts/check_docs.py [--only README.md]
+
+Exit code 0 = every snippet ran; 1 = at least one failed (the offending
+file, block index and traceback are printed).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_FENCE = re.compile(
+    r"^```(?P<info>[^\n`]*)\n(?P<body>.*?)^```\s*$",
+    re.MULTILINE | re.DOTALL)
+
+
+def doc_files(only: str | None = None):
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs)
+            if f.endswith(".md"))
+    if only:
+        files = [f for f in files if os.path.basename(f) == only]
+    return [f for f in files if os.path.exists(f)]
+
+
+def python_blocks(path: str):
+    with open(path) as f:
+        text = f.read()
+    return [m.group("body") for m in _FENCE.finditer(text)
+            if m.group("info").strip() == "python"]
+
+
+def run_file_blocks(path: str, blocks) -> bool:
+    """Concatenate a file's blocks (separated by markers) and run them."""
+    src = []
+    for i, body in enumerate(blocks):
+        src.append(f"print('--- block {i} ---', flush=True)")
+        src.append(body)
+    with tempfile.NamedTemporaryFile(
+            "w", suffix=".py", delete=False) as tf:
+        tf.write("\n".join(src))
+        script = tf.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        proc = subprocess.run(
+            [sys.executable, script], env=env, cwd=REPO,
+            capture_output=True, text=True, timeout=900)
+    finally:
+        os.unlink(script)
+    if proc.returncode != 0:
+        print(f"FAIL {os.path.relpath(path, REPO)}")
+        print(proc.stdout[-2000:])
+        print(proc.stderr[-4000:])
+        return False
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", help="basename of a single doc file to check")
+    args = ap.parse_args()
+
+    files = doc_files(args.only)
+    if not files:
+        print(f"no doc file matches --only {args.only!r}")
+        return 1
+    failed = 0
+    for path in files:
+        blocks = python_blocks(path)
+        rel = os.path.relpath(path, REPO)
+        if not blocks:
+            print(f"  ok {rel}: no python blocks")
+            continue
+        if run_file_blocks(path, blocks):
+            print(f"  ok {rel}: {len(blocks)} block(s) executed")
+        else:
+            failed += 1
+    if failed:
+        print(f"{failed} doc file(s) have broken snippets")
+        return 1
+    print("all documentation snippets execute against the shipped API")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

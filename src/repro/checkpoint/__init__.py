@@ -1,3 +1,3 @@
 from .checkpoint import (  # noqa: F401
-    CheckpointManager, latest_step, restore_state, save_state,
+    CheckpointManager, latest_step, read_manifest, restore_state, save_state,
 )

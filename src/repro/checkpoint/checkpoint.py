@@ -31,7 +31,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_state", "restore_state", "latest_step", "CheckpointManager"]
+__all__ = ["save_state", "restore_state", "read_manifest", "latest_step",
+           "CheckpointManager"]
 
 _MANIFEST = "manifest.json"
 
@@ -96,6 +97,17 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Manifest of a checkpoint (leaf shapes/dtypes + ``extra``) without
+    touching the arrays — cheap format/compatibility checks before a full
+    restore."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step:010d}", _MANIFEST)) as f:
+        return json.load(f)
+
+
 def restore_state(ckpt_dir: str, template, step: Optional[int] = None,
                   shardings=None):
     """Restore into the structure of ``template`` (a state pytree or its
@@ -119,6 +131,12 @@ def restore_state(ckpt_dir: str, template, step: Optional[int] = None,
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         arr = npz[key.replace("/", "|")]
+        if arr.dtype.kind == "V":
+            # npz stores extension dtypes (bfloat16, float8_*) as raw void
+            # bytes; the manifest remembers the real dtype — view it back
+            import ml_dtypes
+            want = manifest["leaves"][key]["dtype"]
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want)))
         expect = tuple(leaf.shape)
         if tuple(arr.shape) != expect:
             raise ValueError(

@@ -1,11 +1,17 @@
 # The paper's primary contribution: the M2XFP metadata-augmented
 # microscaling format family, its baselines, and the encoding DSE.
+# Everything referenced by docs/format.md is exported here.
 from .dtypes import (  # noqa: F401
     FP4_E2M1, FP6_E2M3, FP8_E4M3, FP4_MAG_VALUES, FP6_MAG_VALUES,
-    FloatSpec, round_to_grid,
+    FloatSpec, exp2int, fp4_code_to_value, fp4_value_to_code,
+    fp6_code_to_value, fp6_value_to_code, round_to_grid,
 )
 from .scaling import (  # noqa: F401
     SCALE_RULES, e8m0_decode, e8m0_encode, shared_scale_exponent,
+)
+from .packing import (  # noqa: F401
+    group_reshape, group_unreshape, pack_meta2, pack_nibbles,
+    unpack_meta2, unpack_nibbles,
 )
 from .formats import (  # noqa: F401
     quantize_fp4_fp16scale, quantize_mxfp4, quantize_nvfp4, quantize_smx4,
@@ -13,6 +19,7 @@ from .formats import (  # noqa: F401
 from .m2xfp import (  # noqa: F401
     PackedM2XFP,
     decode_act_m2xfp, decode_weight_m2xfp,
+    elem_em_dequant_with_scale, sg_em_dequant_with_scale,
     encode_act_m2xfp, encode_weight_m2xfp,
     quantize_act_m2nvfp4, quantize_act_m2xfp,
     quantize_weight_m2nvfp4, quantize_weight_m2xfp,

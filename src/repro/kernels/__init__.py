@@ -1,7 +1,11 @@
 # Pallas TPU kernels for the paper's compute hot-spots: fused dequant-GEMM
 # (the augmented PE of Sec. 5.4) and the streaming quantization engine
 # (Sec. 5.5). Validated in interpret mode against ref.py oracles.
+# Layout helpers and constants are exported for docs/kernels.md.
+from .layout import (  # noqa: F401
+    GROUP, N_SUB, SUBGROUP, interleave_pack, interleave_unpack,
+)
 from .ops import (  # noqa: F401
-    m2xfp_matmul, m2xfp_qmatmul, m2xfp_quantize, mxfp4_matmul,
+    m2xfp_matmul, m2xfp_qmatmul, m2xfp_quantize, mxfp4_matmul, on_tpu,
     pack_w_mxfp4, pack_w_sgem, pack_x_elem_em,
 )

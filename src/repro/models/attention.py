@@ -200,44 +200,68 @@ def attention_forward(
     return out, (k, v)
 
 
+def _row_update(buf: jax.Array, new: jax.Array, start: jax.Array) -> jax.Array:
+    """Write ``new`` into ``buf`` at offset ``start`` along the leading axis."""
+    return jax.lax.dynamic_update_slice(
+        buf, new.astype(buf.dtype), (start,) + (0,) * (buf.ndim - 1))
+
+
 def attention_decode(
     p: dict, x: jax.Array, cfg, cache: dict, index: jax.Array,
     window=None, quant: str = "none",
 ):
     """One-token decode against a ring-buffer KV cache.
 
-    cache: {"k": (B,W,nkv,hd), "v": (B,W,nkv,hd), "pos": (W,) int32 (-1 =
-    empty)}. ``index``: absolute position of the new token. The cache is
-    sequence-sharded ('kv_seq' -> TP axis); the softmax reduction over W
-    crosses shards (GSPMD ring-attention-equivalent)."""
+    cache: {"k": (B,W,nkv,hd), "v": (B,W,nkv,hd), "pos": int32 (-1 = empty)}.
+    ``index``: absolute position of the new token — either a scalar (all
+    sequences at the same position, pos (W,)) or a (B,) vector for
+    continuous batching (each batch row is an independent request slot at
+    its own position; pos is then per-slot (B, W) — see repro.serve). The
+    cache is sequence-sharded ('kv_seq' -> TP axis); the softmax reduction
+    over W crosses shards (GSPMD ring-attention-equivalent)."""
     b = x.shape[0]
     quantized_kv = cfg.kv_quant == "m2xfp"
     w = (cache["k"]["codes"] if quantized_kv else cache["k"]).shape[1]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    pos_new = jnp.full((b, 1), index, dtype=jnp.int32)
+    per_slot = jnp.ndim(index) == 1
+    if per_slot:
+        pos_new = index.reshape(b, 1).astype(jnp.int32)
+    else:
+        pos_new = jnp.full((b, 1), index, dtype=jnp.int32)
     q, k_new, v_new = _project_qkv(p, x, cfg, pos_new, quant)
 
-    slot = jnp.mod(index, w)
+    slot = jnp.mod(index, w)                       # scalar or (B,)
     if quantized_kv:
         from .kvquant import kv_decode, kv_encode
         kc, vc = {}, {}
         for name, new, store in (("k", k_new, kc), ("v", v_new, vc)):
             enc = kv_encode(new)
             for key in ("codes", "scales", "meta"):
-                store[key] = jax.lax.dynamic_update_slice(
-                    cache[name][key], enc[key], (0, slot, 0, 0))
+                if per_slot:
+                    store[key] = jax.vmap(_row_update)(
+                        cache[name][key], enc[key], slot)
+                else:
+                    store[key] = jax.lax.dynamic_update_slice(
+                        cache[name][key], enc[key], (0, slot, 0, 0))
                 store[key] = constrain(
                     store[key], ("batch", "kv_seq", "kv_heads", None))
         k = kv_decode(kc)
         v = kv_decode(vc)
     else:
-        k = jax.lax.dynamic_update_slice(
-            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(
-            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        if per_slot:
+            k = jax.vmap(_row_update)(cache["k"], k_new, slot)
+            v = jax.vmap(_row_update)(cache["v"], v_new, slot)
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
         kc, vc = k, v
-    pos = jax.lax.dynamic_update_slice(
-        cache["pos"], jnp.full((1,), index, jnp.int32), (slot,))
+    if per_slot:
+        pos = jax.vmap(_row_update)(cache["pos"], pos_new, slot)
+    else:
+        pos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((1,), index, jnp.int32), (slot,))
     k = constrain(k, ("batch", "kv_seq", "kv_heads", None))
     v = constrain(v, ("batch", "kv_seq", "kv_heads", None))
 
@@ -248,8 +272,10 @@ def attention_decode(
     sc = einsum_f32acc("bkgd,bwkd->bkgw", qh,
                        k.astype(jnp.bfloat16)) * (hd ** -0.5)
     sc = softcap(sc, cfg.attn_softcap)
-    valid = (pos >= 0) & (pos <= index) & (index - pos < eff_w)
-    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    pos2d = pos if per_slot else pos[None, :]      # (B, W) or (1, W)
+    idx2d = index[:, None] if per_slot else index
+    valid = (pos2d >= 0) & (pos2d <= idx2d) & (idx2d - pos2d < eff_w)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
     sc = constrain(sc, ("batch", "kv_heads", None, "kv_seq"))
     probs = jax.nn.softmax(sc, axis=-1)
     out = einsum_f32acc("bkgw,bwkd->bkgd", probs.astype(jnp.bfloat16),
@@ -261,22 +287,28 @@ def attention_decode(
 
 
 def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,
-               dtype=jnp.bfloat16) -> dict:
+               dtype=jnp.bfloat16, per_slot: bool = False) -> dict:
     """Empty ring-buffer cache. Size = min(window, max_len) when windowed.
     cfg.kv_quant == 'm2xfp': K/V stored as packed Sg-EM streams (Sec. 6.4,
-    4.5 bits/elem resident)."""
+    4.5 bits/elem resident).
+
+    ``per_slot=True`` gives the paged layout used by the serving engine:
+    positions are tracked per batch row ((B, W) instead of (W,)) so each
+    row is an independently admitted/evicted request slot, and
+    ``attention_decode`` must then be called with a (B,) index vector."""
     w = min(window, max_len) if window else max_len
+    pos_shape = (batch, w) if per_slot else (w,)
     if cfg.kv_quant == "m2xfp":
         from .kvquant import kv_cache_spec
         return {
             "k": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd),
             "v": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd),
-            "pos": jnp.full((w,), -1, jnp.int32),
+            "pos": jnp.full(pos_shape, -1, jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
         "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.hd), dtype),
-        "pos": jnp.full((w,), -1, jnp.int32),
+        "pos": jnp.full(pos_shape, -1, jnp.int32),
     }
 
 

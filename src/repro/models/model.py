@@ -266,8 +266,14 @@ def _hybrid_forward(params, cfg, h, positions, quant):
 # Decode (single token against caches)
 # ---------------------------------------------------------------------------
 
-def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
-    """Cache pytree for decode_step."""
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                per_slot: bool = False) -> dict:
+    """Cache pytree for decode_step.
+
+    ``per_slot=True``: paged serving layout — attention positions are
+    tracked per batch row so each row is an independent request slot
+    (continuous batching; see repro.serve.engine). decode_step must then
+    receive a (B,) index vector instead of a scalar."""
     if cfg.family == "ssm":
         n_pairs = cfg.n_layers // 2
         return {
@@ -283,7 +289,8 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
             "mamba": jax.vmap(lambda _: mb.init_mamba2_cache(cfg, batch))(
                 jnp.arange(n_mamba)),
             "attn": jax.vmap(
-                lambda _: attn.init_cache(cfg, batch, max_len, dtype=dtype))(
+                lambda _: attn.init_cache(cfg, batch, max_len, dtype=dtype,
+                                          per_slot=per_slot))(
                 jnp.arange(n_seg)),
         }
     if cfg.local_global:
@@ -292,22 +299,26 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
         w = cfg.sliding_window or 4096
         local = jax.vmap(
             lambda _: attn.init_cache(cfg, batch, max_len, window=w,
-                                      dtype=dtype))(jnp.arange(n_pairs))
-        glob = jax.vmap(
-            lambda _: attn.init_cache(cfg, batch, max_len, dtype=dtype))(
+                                      dtype=dtype, per_slot=per_slot))(
             jnp.arange(n_pairs))
+        glob = jax.vmap(
+            lambda _: attn.init_cache(cfg, batch, max_len, dtype=dtype,
+                                      per_slot=per_slot))(jnp.arange(n_pairs))
         return {"local": local, "global": glob}
     w = cfg.sliding_window
     layers = jax.vmap(
         lambda _: attn.init_cache(cfg, batch, max_len, window=w,
-                                  dtype=dtype))(jnp.arange(cfg.n_layers))
+                                  dtype=dtype, per_slot=per_slot))(
+        jnp.arange(cfg.n_layers))
     return {"layers": layers}
 
 
 def decode_step(params: dict, cfg, batch: dict, caches: dict,
                 index: jax.Array):
     """One token for the whole batch. batch: {"tokens": (B,1)} or embeds.
-    ``index``: scalar int32 absolute position. Returns (logits, caches)."""
+    ``index``: absolute position — scalar int32 (all rows in lockstep) or a
+    (B,) int32 vector with per-slot caches (continuous batching; the serve
+    engine's path). Returns (logits, caches)."""
     h = _embed_in(params, cfg, batch)
     quant = cfg.quant
 

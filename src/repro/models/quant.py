@@ -11,9 +11,11 @@ Modes (ModelConfig.quant):
           roofline memory term sees). Activations are Elem-EM fake-quantized
           online (the quantization engine).
 
-The decode math here is the pure-XLA mirror of kernels/m2xfp_matmul.py (the
-Pallas kernel is used on real TPU backends; XLA path keeps the dry-run
-compilable on CPU and is numerically identical).
+The serve GEMM dispatches per backend (``serve_matmul_backend``): on TPU the
+packed streams feed the fused dequant-GEMM Pallas kernel in
+kernels/m2xfp_matmul.py; elsewhere the pure-XLA mirror below decodes inline.
+Both are numerically identical (every decoded value is exact in bf16);
+REPRO_SERVE_KERNEL=xla|pallas forces one side (docs/kernels.md).
 """
 from __future__ import annotations
 
@@ -33,7 +35,8 @@ N_SUB = GROUP // SUBGROUP
 
 __all__ = [
     "fake_quant_weight", "fake_quant_act", "ste", "pack_serving_weight",
-    "decode_serving_weight", "quantized_matmul", "init_linear", "QLinear",
+    "decode_serving_weight", "quantized_matmul", "serve_matmul_backend",
+    "init_linear", "QLinear",
 ]
 
 
@@ -171,6 +174,63 @@ def decode_serving_weight(p: "PackedWeight") -> jax.Array:
 # The quantized linear primitive used by every model block
 # ---------------------------------------------------------------------------
 
+def _pallas_tiles(k: int, n: int) -> bool:
+    """True when (K, N) satisfy the m2xfp_matmul alignment constraints with
+    the default (bm, bn, bk) = (128, 128, 512) blocks: bk = min(512, K)
+    must be a multiple of 32 dividing K, and N must be a multiple of the
+    128-lane tile (kernels/ops.py) — interpret mode tolerates narrower N,
+    Mosaic does not, and the dispatcher must be safe on real TPUs. The row
+    dim M is padded by the kernel wrapper."""
+    if k % 32 or (k > 512 and k % 512):
+        return False
+    return n % 128 == 0
+
+
+def serve_matmul_backend() -> str:
+    """Dispatch rule for the serve-path GEMM (documented in docs/kernels.md):
+
+      REPRO_SERVE_KERNEL=xla     always use the pure-XLA decode mirror
+      REPRO_SERVE_KERNEL=pallas  prefer kernels/m2xfp_matmul (interpret
+                                 mode off-TPU — slow, for validation)
+      unset / auto               Pallas on a TPU backend, XLA elsewhere
+
+    Either Pallas choice still requires the weight to satisfy
+    ``_pallas_tiles``; untileable shapes fall back to the XLA mirror.
+    """
+    import os
+    mode = os.environ.get("REPRO_SERVE_KERNEL", "auto")
+    if mode in ("xla", "pallas"):
+        return mode
+    if mode != "auto":
+        raise ValueError(
+            f"REPRO_SERVE_KERNEL={mode!r}: expected 'xla', 'pallas' or "
+            f"'auto'")
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _serve_matmul(x: jax.Array, w: "PackedWeight", dims) -> jax.Array:
+    """Packed-weight GEMM: Elem-EM fake-quantize the activations online,
+    then contract against the packed Sg-EM streams. On TPU the streams feed
+    the fused dequant-GEMM Pallas kernel (weights never rematerialize in
+    bf16 in HBM); on CPU the XLA mirror decodes inline (numerically
+    identical — every decoded value is exact in bf16)."""
+    from .numerics import dot_f32acc
+    xq = fake_quant_act(x.astype(jnp.float32), "m2xfp").astype(jnp.bfloat16)
+    k = w.shape[0]
+    n = 1
+    for d in w.shape[1:]:
+        n *= d
+    if serve_matmul_backend() == "pallas" and _pallas_tiles(k, n):
+        from repro.kernels import m2xfp_matmul
+        streams = {"codes": w.codes.reshape(k // 2, n),
+                   "scales": w.scales.reshape(k // GROUP, n),
+                   "meta": w.meta.reshape(k // GROUP, n)}
+        out = m2xfp_matmul(xq.reshape(-1, k), streams)
+        return out.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
+    wd = decode_serving_weight(w)
+    return dot_f32acc(xq, wd, dims).astype(x.dtype)
+
+
 def quantized_matmul(x: jax.Array, w, quant: str, fmt: str = "m2xfp",
                      precision=None) -> jax.Array:
     """x (..., K) @ w (K, N...) under the configured quantization mode.
@@ -179,9 +239,7 @@ def quantized_matmul(x: jax.Array, w, quant: str, fmt: str = "m2xfp",
     from .numerics import dot_f32acc
     dims = (((x.ndim - 1,), (0,)), ((), ()))
     if quant == "serve" and isinstance(w, PackedWeight):
-        wd = decode_serving_weight(w)
-        xq = fake_quant_act(x.astype(jnp.float32), "m2xfp").astype(jnp.bfloat16)
-        return dot_f32acc(xq, wd, dims).astype(x.dtype)
+        return _serve_matmul(x, w, dims)
     if quant == "qat":
         wq = ste(w, fake_quant_weight(w.astype(jnp.float32), fmt).astype(w.dtype))
         xq = ste(x, fake_quant_act(x.astype(jnp.float32), fmt).astype(x.dtype))

@@ -1,0 +1,9 @@
+# Packed-weight serving: offline prequantization to M2XFP streams, a
+# continuous-batching slot scheduler, and the batched decode engine
+# (paper Sec. 5 deployment path — weights stay 4.5 bits/elem in HBM).
+from .engine import ServeEngine, ServeStats, tree_nbytes  # noqa: F401
+from .prequant import (  # noqa: F401
+    load_packed_checkpoint, packed_template, prequantize_checkpoint,
+    prequantize_params, save_packed_checkpoint,
+)
+from .scheduler import Request, SlotScheduler  # noqa: F401

@@ -1,0 +1,211 @@
+"""Batched autoregressive serving engine over packed M2XFP weight streams.
+
+The engine owns:
+  * a packed parameter tree (``repro.serve.prequant`` / checkpoint load) —
+    every GEMM weight resident in HBM as u8 code/scale/meta streams,
+    4.5 bits/element, decoded inline by the quantized matmul (Pallas kernel
+    on TPU, XLA mirror on CPU — see repro.models.quant);
+  * a paged KV cache: ``init_caches(..., per_slot=True)`` — batch row b is
+    request slot b, a fixed-size page of the cache pool with its own
+    position track, admitted/evicted independently (continuous batching);
+    with ``cfg.kv_quant == 'm2xfp'`` pages hold packed Sg-EM streams;
+  * a host-side ``SlotScheduler`` deciding which request occupies which
+    slot each step.
+
+Every decode step runs ONE jitted ``decode_step`` over all slots with a
+(B,) per-slot position vector. Prompts are teacher-forced through the same
+decode step (one prompt token consumed per step), so a newly admitted
+request prefils while its neighbours keep generating — no batch-wide stall.
+Slots whose request finished keep ticking on a dummy token until the
+scheduler refills them; admit-time reset invalidates the slot's position
+track (which masks every stale KV entry) and re-initializes recurrent
+state, so no state leaks between requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import decode_step, init_caches
+
+from .scheduler import Request, SlotScheduler
+
+__all__ = ["ServeEngine", "ServeStats", "tree_nbytes"]
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of every array leaf (what the tree keeps resident)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_slots: int = 1
+    steps: int = 0                 # decode steps launched
+    slot_steps: int = 0            # sum over steps of active slots
+    prefill_tokens: int = 0        # prompt tokens teacher-forced
+    generated_tokens: int = 0      # tokens sampled and returned
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_sec(self) -> float:
+        total = self.prefill_tokens + self.generated_tokens
+        return total / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per step."""
+        if not self.steps:
+            return 0.0
+        return self.slot_steps / (self.steps * self.n_slots)
+
+
+def _greedy(logits: np.ndarray) -> np.ndarray:
+    """(B, V) -> (B,) argmax token ids."""
+    return np.argmax(logits, axis=-1).astype(np.int32)
+
+
+def _reset_slot(caches: dict, slot: jax.Array) -> dict:
+    """Return ``caches`` with one slot's rows back in their init state.
+
+    Every cache leaf is layer-stacked with the slot (batch) axis second.
+    Attention K/V pages need no scrub — setting the slot's position track
+    to -1 masks every stale entry (``attention_decode``'s valid test), so
+    only the position rows and the recurrent-state rows are written.
+    ``m`` is the mlstm/slstm running log-max, initialized to -1e30."""
+    def fix(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1] if keys else ""
+        if name == "pos":
+            return leaf.at[:, slot].set(-1)
+        if any(k in ("mlstm", "slstm", "mamba") for k in keys):
+            fill = -1e30 if name == "m" else 0.0
+            return leaf.at[:, slot].set(jnp.asarray(fill, leaf.dtype))
+        return leaf                        # K/V pages: masked via pos
+    return jax.tree_util.tree_map_with_path(fix, caches)
+
+
+class ServeEngine:
+    """Continuous-batching decode engine. See module docstring.
+
+    Parameters
+    ----------
+    params : packed parameter tree (``prequantize_params`` output) — or a
+        dense tree if ``cfg.quant != 'serve'`` (useful for A/B parity runs).
+    cfg : ModelConfig, normally with ``quant='serve'``.
+    n_slots : batch width = number of concurrently served requests.
+    max_len : cache capacity per slot (prompt + generated tokens; a
+        sliding-window config bounds the page at the window instead).
+    sample_fn : (B, V) float32 logits -> (B,) int32 token ids; greedy
+        argmax by default (deterministic — what the parity tests pin).
+    """
+
+    def __init__(self, params, cfg, n_slots: int = 8, max_len: int = 256,
+                 sample_fn: Optional[Callable] = None):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.sample_fn = sample_fn or _greedy
+        self.scheduler = SlotScheduler(n_slots)
+        self.stats = ServeStats(n_slots=n_slots)
+
+        self.caches = init_caches(cfg, n_slots, max_len, per_slot=True)
+        # host-side per-slot state
+        self._tokens = np.zeros((n_slots, 1), np.int32)   # next input token
+        self._index = np.zeros((n_slots,), np.int32)      # absolute position
+
+        # donate the cache pool: decode updates it in place instead of
+        # materializing a second copy every step (2x HBM otherwise; CPU
+        # ignores donation with a harmless warning)
+        self._step = jax.jit(
+            lambda p, b, c, i: decode_step(p, cfg, b, c, i),
+            donate_argnums=(2,))
+        self._reset = jax.jit(_reset_slot, donate_argnums=(0,))
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               eos_id: Optional[int] = None) -> Request:
+        """Queue a request; it is admitted when a slot frees up."""
+        if len(prompt) + max_new_tokens > self.max_len \
+                and not self.cfg.sliding_window:
+            raise ValueError(
+                f"prompt+generation {len(prompt)}+{max_new_tokens} exceeds "
+                f"cache capacity {self.max_len}")
+        return self.scheduler.submit(list(prompt), max_new_tokens, eos_id)
+
+    def _admit(self) -> None:
+        for req in self.scheduler.admit(self.stats.steps):
+            slot = req.slot
+            self.caches = self._reset(self.caches, jnp.int32(slot))
+            self._index[slot] = 0
+            self._tokens[slot, 0] = req.prompt[0]
+
+    # -- decode loop -------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit, run one batched decode step, route tokens. Returns the
+        number of requests that finished this step."""
+        self._admit()
+        if not self.scheduler.active:
+            return 0
+        logits, self.caches = self._step(
+            self.params, {"tokens": jnp.asarray(self._tokens)}, self.caches,
+            jnp.asarray(self._index))
+        sampled = self.sample_fn(
+            np.asarray(logits[:, -1]).astype(np.float32))
+
+        finished = 0
+        self.stats.steps += 1
+        self.stats.slot_steps += len(self.scheduler.active)
+        for slot, req in list(self.scheduler.active.items()):
+            consumed = self._index[slot] + 1       # tokens fed so far
+            if consumed < len(req.prompt):
+                # still prefilling: teacher-force the next prompt token
+                # (the emitted token is discarded)
+                self._tokens[slot, 0] = req.prompt[consumed]
+                self.stats.prefill_tokens += 1
+            else:
+                tok = int(sampled[slot])
+                req.output.append(tok)
+                self._tokens[slot, 0] = tok
+                self.stats.generated_tokens += 1
+            self._index[slot] += 1
+            if req.done:
+                self.scheduler.evict(slot, self.stats.steps)
+                finished += 1
+        return finished
+
+    def run(self) -> List[Request]:
+        """Step until queue and slots drain. Returns the requests that
+        finished during *this* drain, in submission order."""
+        already_done = len(self.scheduler.finished)
+        t0 = time.perf_counter()
+        while self.scheduler.has_work:
+            self.step()
+        self.stats.wall_s += time.perf_counter() - t0
+        return sorted(self.scheduler.finished[already_done:],
+                      key=lambda r: r.rid)
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: int,
+                 eos_id: Optional[int] = None) -> List[List[int]]:
+        """Batch convenience: submit every prompt, drain, return outputs."""
+        reqs = [self.submit(p, max_new_tokens, eos_id) for p in prompts]
+        self.run()
+        return [r.output for r in reqs]
+
+    # -- accounting --------------------------------------------------------
+
+    def weight_bytes(self) -> int:
+        return tree_nbytes(self.params)
+
+    def kv_bytes(self) -> int:
+        return tree_nbytes(self.caches)

@@ -1,0 +1,95 @@
+"""Offline prequantization: bf16 checkpoint -> packed M2XFP checkpoint.
+
+The serving engine must never rematerialize weights in bf16 in HBM, so the
+bf16 -> Sg-EM conversion happens once, offline, and the *packed* streams
+(u8 codes + E8M0 scales + 2-bit meta, 4.5 bits/element) are what the
+checkpoint stores and what the engine loads. ``PackedWeight`` is a
+registered pytree, so the packed tree flows through ``repro.checkpoint``
+unchanged — leaves are keyed ``<path>/.codes`` / ``.scales`` / ``.meta``.
+
+    params  = init_params(key, cfg)                  # or restore_state(...)
+    packed  = prequantize_params(params, cfg)
+    save_packed_checkpoint("ckpt/packed", packed, cfg)
+    ...
+    packed2 = load_packed_checkpoint("ckpt/packed", cfg)   # bit-identical
+
+``load_packed_checkpoint`` builds the restore template with
+``jax.eval_shape`` — no dense weights are ever allocated on the load path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+from repro.checkpoint import read_manifest, restore_state, save_state
+from repro.models.model import init_params, pack_params_for_serving
+
+__all__ = [
+    "prequantize_params", "packed_template", "save_packed_checkpoint",
+    "load_packed_checkpoint", "prequantize_checkpoint",
+]
+
+_PACKED_TAG = "m2xfp-packed-v1"
+
+
+def _serve_cfg(cfg):
+    return cfg if cfg.quant == "serve" else \
+        dataclasses.replace(cfg, quant="serve")
+
+
+def prequantize_params(params: dict, cfg) -> dict:
+    """Dense param tree -> packed M2XFP tree (every GEMM weight becomes a
+    ``PackedWeight``; embeddings / norms / recurrence params stay bf16)."""
+    return pack_params_for_serving(params, _serve_cfg(cfg))
+
+
+def packed_template(cfg) -> dict:
+    """Abstract (ShapeDtypeStruct) packed tree for checkpoint restore —
+    computed with eval_shape, so no weight memory is allocated."""
+    scfg = _serve_cfg(cfg)
+
+    def build(key):
+        return pack_params_for_serving(init_params(key, scfg), scfg)
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def save_packed_checkpoint(ckpt_dir: str, packed: dict, cfg,
+                           step: int = 0, extra: Optional[dict] = None,
+                           keep: int = 3) -> str:
+    """Atomic save of a packed tree via repro.checkpoint. Returns the
+    checkpoint directory."""
+    meta = {"format": _PACKED_TAG, "model": cfg.name}
+    meta.update(extra or {})
+    return save_state(ckpt_dir, step, packed, extra=meta, keep=keep)
+
+
+def load_packed_checkpoint(ckpt_dir: str, cfg,
+                           step: Optional[int] = None,
+                           shardings=None) -> Tuple[dict, dict]:
+    """Restore a packed tree. Returns (packed, manifest_extra); raises if
+    the checkpoint was not written by ``save_packed_checkpoint``."""
+    tag = read_manifest(ckpt_dir, step).get("extra", {}).get("format")
+    if tag != _PACKED_TAG:
+        raise ValueError(
+            f"{ckpt_dir} is not a packed M2XFP checkpoint "
+            f"(format={tag!r}); run prequantize_checkpoint first")
+    return restore_state(ckpt_dir, packed_template(cfg), step, shardings)
+
+
+def prequantize_checkpoint(src_dir: str, dst_dir: str, cfg,
+                           step: Optional[int] = None,
+                           keep: int = 3) -> str:
+    """Offline pass: read a dense bf16 checkpoint, pack every GEMM weight
+    to Sg-EM streams, write a packed checkpoint. The only time dense
+    weights exist in memory is inside this converter."""
+    template = jax.eval_shape(
+        lambda key: init_params(key, cfg), jax.random.PRNGKey(0))
+    src_step = read_manifest(src_dir, step)["step"]
+    params, _ = restore_state(src_dir, template, src_step)
+    packed = prequantize_params(params, cfg)
+    return save_packed_checkpoint(
+        dst_dir, packed, cfg, step=src_step,
+        extra={"source": src_dir}, keep=keep)

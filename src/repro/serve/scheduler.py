@@ -1,0 +1,113 @@
+"""Continuous-batching request scheduler (host-side, no jax).
+
+The serving engine holds a fixed number of *slots* — rows of the batched
+decode step and of the paged KV cache. Requests queue in FIFO order; a
+request is admitted when a slot frees up and evicted the step it finishes.
+Decode steps never stall on stragglers: a long request keeps its slot while
+short requests cycle through the others (continuous batching).
+
+Invariants (checked by ``SlotScheduler.check``):
+  * free slots and active slots partition [0, n_slots)
+  * every active slot maps to exactly one RUNNING request
+  * queued requests are QUEUED and hold no slot
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+__all__ = ["Request", "SlotScheduler", "QUEUED", "RUNNING", "FINISHED"]
+
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    prompt tokens are teacher-forced through the decode step (each step
+    consumes one prompt token); afterwards the model's sampled tokens are
+    appended to ``output`` until ``max_new_tokens`` (or ``eos_id``).
+    """
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    state: str = QUEUED
+    admit_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def done(self) -> bool:
+        if len(self.output) >= self.max_new_tokens:
+            return True
+        return bool(self.output) and self.output[-1] == self.eos_id
+
+
+class SlotScheduler:
+    """FIFO admit / immediate-evict slot scheduler."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.free: List[int] = list(range(n_slots))
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self._rid = itertools.count()
+
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               eos_id: Optional[int] = None) -> Request:
+        if not prompt:
+            raise ValueError("empty prompt")
+        req = Request(rid=next(self._rid), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self.queue.append(req)
+        return req
+
+    def admit(self, step: int = 0) -> List[Request]:
+        """Move queued requests into free slots (FIFO). Returns the newly
+        admitted requests, each with ``req.slot`` assigned."""
+        admitted = []
+        while self.queue and self.free:
+            req = self.queue.popleft()
+            slot = self.free.pop(0)
+            req.slot, req.state, req.admit_step = slot, RUNNING, step
+            self.active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def evict(self, slot: int, step: int = 0) -> Request:
+        """Release a slot; its request is FINISHED and the slot is free."""
+        req = self.active.pop(slot)
+        req.state, req.finish_step, req.slot = FINISHED, step, None
+        self.free.append(slot)
+        self.finished.append(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.active) / self.n_slots
+
+    def check(self) -> None:
+        """Assert the scheduler invariants (used by tests)."""
+        assert sorted(self.free + list(self.active)) == sorted(
+            set(self.free) | set(self.active)), "slot listed twice"
+        assert set(self.free).isdisjoint(self.active), "free ∩ active"
+        assert set(self.free) | set(self.active) == set(range(self.n_slots))
+        for slot, req in self.active.items():
+            assert req.slot == slot and req.state == RUNNING
+        for req in self.queue:
+            assert req.slot is None and req.state == QUEUED
+        for req in self.finished:
+            assert req.slot is None and req.state == FINISHED

@@ -18,6 +18,7 @@ from repro.core.m2xfp import (
 from conftest import heavy_tailed
 
 
+@pytest.mark.smoke
 def test_grids():
     assert np.allclose(FP4_MAG_VALUES, [0, .5, 1, 1.5, 2, 3, 4, 6])
     assert float(FP6_MAG_VALUES[-1]) == 7.5
@@ -62,6 +63,7 @@ def test_all_scale_rules_run():
         assert not jnp.any(jnp.isnan(dq))
 
 
+@pytest.mark.smoke
 def test_paper_encoding_example():
     """Paper Sec. 4.4: FP4 value 4 -> decode candidates {3.75, 4, 4.5, 5};
     values in (3.5, 3.625) suffer the single dropped-candidate rounding."""
@@ -84,6 +86,7 @@ def test_top1_lowest_index_tiebreak():
     assert float(oh[0]) == 1.0 and float(jnp.sum(oh)) == 1.0
 
 
+@pytest.mark.smoke
 def test_pack_roundtrip_matches_fake_quant(rng):
     x = jnp.asarray(heavy_tailed(rng, (64, 256)))
     assert jnp.array_equal(decode_act_m2xfp(encode_act_m2xfp(x)),
@@ -92,6 +95,7 @@ def test_pack_roundtrip_matches_fake_quant(rng):
                            quantize_weight_m2xfp(x))
 
 
+@pytest.mark.smoke
 def test_packed_footprint_is_4p5_bits(rng):
     x = jnp.asarray(heavy_tailed(rng, (32, 128)))
     p = encode_act_m2xfp(x)

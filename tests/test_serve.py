@@ -1,0 +1,229 @@
+"""Serving engine tests: packed-checkpoint bit-exactness, batched-decode
+parity vs the single-request serve path, scheduler invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, init_caches, init_params
+from repro.models.quant import PackedWeight
+from repro.serve import (
+    ServeEngine, SlotScheduler, load_packed_checkpoint, prequantize_params,
+    save_packed_checkpoint, tree_nbytes,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    base = dict(name="serve-test", family="dense", n_layers=2, d_model=64,
+                n_heads=2, n_kv_heads=1, d_ff=128, vocab_size=97,
+                remat=False, quant="serve")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def packed_model():
+    cfg = _cfg()
+    params = init_params(KEY, cfg)
+    return cfg, params, prequantize_params(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Prequantization / packed checkpoints
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_packed_checkpoint_roundtrip_bitexact(packed_model, tmp_path):
+    """Packed u8 streams (and residual bf16 leaves) survive save/load
+    bit-for-bit — the serving engine never re-quantizes."""
+    cfg, _, packed = packed_model
+    save_packed_checkpoint(str(tmp_path), packed, cfg)
+    packed2, extra = load_packed_checkpoint(str(tmp_path), cfg)
+    assert extra["format"] == "m2xfp-packed-v1"
+    flat1 = jax.tree_util.tree_leaves(packed)
+    flat2 = jax.tree_util.tree_leaves(packed2)
+    assert len(flat1) == len(flat2)
+    for a, b in zip(flat1, flat2):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.smoke
+def test_packed_tree_is_4p5_bits_on_gemm_weights(packed_model):
+    cfg, params, packed = packed_model
+    for node in jax.tree.leaves(
+            packed, is_leaf=lambda x: isinstance(x, PackedWeight)):
+        if isinstance(node, PackedWeight):
+            n_elems = 2 * node.codes.size
+            assert 8 * tree_nbytes(node) / n_elems == 4.5
+    # and the packed tree is strictly smaller than the dense one
+    assert tree_nbytes(packed) < tree_nbytes(params)
+
+
+def test_load_rejects_dense_checkpoint(packed_model, tmp_path):
+    cfg, params, _ = packed_model
+    from repro.checkpoint import save_state
+    save_state(str(tmp_path), 0, params)
+    with pytest.raises(ValueError, match="not a packed"):
+        load_packed_checkpoint(str(tmp_path), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Batched decode parity
+# ---------------------------------------------------------------------------
+
+def _serve_single(packed, cfg, prompt, n_new, max_len=32):
+    """Reference: one request alone through the scalar-index serve path."""
+    caches = init_caches(cfg, 1, max_len)
+    step = jax.jit(lambda p, b, c, i: decode_step(p, cfg, b, c, i))
+    tok = jnp.asarray([[prompt[0]]], jnp.int32)
+    out, t = [], 0
+    while len(out) < n_new:
+        lg, caches = step(packed, {"tokens": tok}, caches, jnp.int32(t))
+        t += 1
+        if t < len(prompt):
+            tok = jnp.asarray([[prompt[t]]], jnp.int32)
+        else:
+            nxt = int(jnp.argmax(lg[0, -1]))
+            out.append(nxt)
+            tok = jnp.asarray([[nxt]], jnp.int32)
+    return out
+
+
+@pytest.mark.smoke
+def test_batched_decode_matches_single_request(packed_model):
+    """Continuous batching with ragged prompt lengths + slot reuse produces
+    exactly the tokens of each request served alone."""
+    cfg, _, packed = packed_model
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in (5, 3, 7, 2)]
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32)
+    outs = eng.generate(prompts, max_new_tokens=4)
+    eng.scheduler.check()
+    for prompt, got in zip(prompts, outs):
+        assert got == _serve_single(packed, cfg, prompt, 4)
+
+
+def test_batched_decode_parity_with_quantized_kv(packed_model):
+    """Same parity holds when KV pages are packed Sg-EM streams."""
+    cfg, params, _ = packed_model
+    qcfg = dataclasses.replace(cfg, kv_quant="m2xfp")
+    packed = prequantize_params(params, qcfg)
+    rng = np.random.default_rng(4)
+    prompts = [list(map(int, rng.integers(0, qcfg.vocab_size, n)))
+               for n in (4, 6, 3)]
+    eng = ServeEngine(packed, qcfg, n_slots=2, max_len=32)
+    outs = eng.generate(prompts, max_new_tokens=3)
+    for prompt, got in zip(prompts, outs):
+        assert got == _serve_single(packed, qcfg, prompt, 3)
+
+
+def test_slot_reuse_does_not_leak_state(packed_model):
+    """A request admitted into a reused slot sees a clean page: serving the
+    same prompt twice (before/after other traffic) yields identical
+    output."""
+    cfg, _, packed = packed_model
+    rng = np.random.default_rng(5)
+    probe = list(map(int, rng.integers(0, cfg.vocab_size, 5)))
+    filler = [list(map(int, rng.integers(0, cfg.vocab_size, 6)))
+              for _ in range(3)]
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32)
+    first = eng.generate([probe] + filler, max_new_tokens=4)[0]
+    again = eng.generate([probe], max_new_tokens=4)[0]
+    assert first == again
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_scheduler_admit_evict_invariants():
+    sched = SlotScheduler(3)
+    reqs = [sched.submit([1, 2], max_new_tokens=4) for _ in range(5)]
+    sched.check()
+    admitted = sched.admit(step=0)
+    assert [r.rid for r in admitted] == [0, 1, 2]      # FIFO
+    assert not sched.free and len(sched.queue) == 2
+    sched.check()
+    # evicting frees the slot; next admit reuses it for the oldest queued
+    slot = reqs[1].slot
+    sched.evict(slot, step=7)
+    sched.check()
+    assert reqs[1].state == "finished" and reqs[1].finish_step == 7
+    nxt = sched.admit(step=8)
+    assert [r.rid for r in nxt] == [3] and nxt[0].slot == slot
+    sched.check()
+    # draining everything returns all slots to free
+    while sched.has_work:
+        for s in list(sched.active):
+            sched.evict(s)
+        sched.admit()
+        sched.check()
+    assert sorted(sched.free) == [0, 1, 2]
+    assert len(sched.finished) == 5
+
+
+def test_scheduler_rejects_bad_requests():
+    sched = SlotScheduler(1)
+    with pytest.raises(ValueError):
+        sched.submit([], max_new_tokens=2)
+    with pytest.raises(ValueError):
+        SlotScheduler(0)
+
+
+def test_engine_rejects_over_capacity_prompt(packed_model):
+    cfg, _, packed = packed_model
+    eng = ServeEngine(packed, cfg, n_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(list(range(6)), max_new_tokens=6)
+
+
+def test_eos_stops_generation(packed_model):
+    """A request whose sampler emits eos finishes early and frees the
+    slot."""
+    cfg, _, packed = packed_model
+
+    def always_eos(logits):
+        return np.full((logits.shape[0],), 42, np.int32)
+
+    eng = ServeEngine(packed, cfg, n_slots=1, max_len=32,
+                      sample_fn=always_eos)
+    req = eng.submit([1, 2, 3], max_new_tokens=10, eos_id=42)
+    eng.run()
+    assert req.output == [42] and req.state == "finished"
+    eng.scheduler.check()
+
+
+# ---------------------------------------------------------------------------
+# Stats / accounting
+# ---------------------------------------------------------------------------
+
+def test_run_returns_only_this_drain(packed_model):
+    """A second submit/run cycle must not re-deliver earlier requests."""
+    cfg, _, packed = packed_model
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32)
+    r1 = eng.submit([1, 2, 3], max_new_tokens=2)
+    first = eng.run()
+    assert [r.rid for r in first] == [r1.rid]
+    r2 = eng.submit([4, 5], max_new_tokens=2)
+    second = eng.run()
+    assert [r.rid for r in second] == [r2.rid]
+
+
+def test_stats_token_accounting(packed_model):
+    cfg, _, packed = packed_model
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32)
+    prompts = [[1, 2, 3, 4], [5, 6]]
+    eng.generate(prompts, max_new_tokens=3)
+    s = eng.stats
+    assert s.generated_tokens == 2 * 3
+    # every active slot-step processed exactly one token
+    assert s.prefill_tokens + s.generated_tokens == s.slot_steps
+    assert 0 < s.occupancy <= 1
