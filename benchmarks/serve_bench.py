@@ -1,7 +1,12 @@
 """Serving benchmark: batched decode on packed M2XFP weight streams.
 
 Reports, for the continuous-batching engine (repro.serve):
-  * measured tokens/sec of the CPU dry run (XLA mirror of the PE decode)
+  * measured tokens/sec of the CPU dry run (XLA mirror of the PE decode),
+    split into prefill and decode phases, plus mean time-to-first-token in
+    engine steps
+  * chunked prefill vs the legacy one-token path: steps-to-first-token for
+    the same traffic at both settings (the packed weight streams cross HBM
+    once per chunk instead of once per prompt token)
   * HBM bytes/token of the packed deployment vs a bf16 deployment
   * the roofline-modeled decode throughput bound on TPU v5e
     (analysis/roofline.py) and the modeled packed-vs-bf16 speedup — the
@@ -56,6 +61,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--kv-quant", action="store_true",
                     help="store the KV cache in packed Sg-EM too")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="max prompt tokens per slot per step")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="cap on total prefill tokens per step")
     args = ap.parse_args()
 
     cfg = build_cfg(args)
@@ -85,7 +94,9 @@ def main():
                         args.requests)
     prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
                for n in lens]
-    eng = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len)
+    eng = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len,
+                      prefill_chunk=args.prefill_chunk,
+                      prefill_budget=args.prefill_budget)
     outs = eng.generate(prompts, max_new_tokens=args.tokens)
     s = eng.stats
     print(f"served {args.requests} requests on {args.slots} slots: "
@@ -93,7 +104,23 @@ def main():
           f"{s.steps} steps, {s.wall_s:.2f}s "
           f"({s.tokens_per_sec:.1f} tok/s measured on "
           f"{jax.default_backend()}, occupancy {s.occupancy:.2f})")
+    print(f"phases: {s.prefill_steps} prefill steps "
+          f"({s.prefill_tokens_per_sec:.1f} prompt tok/s), "
+          f"{s.decode_steps} decode steps "
+          f"({s.decode_tokens_per_sec:.1f} new tok/s); "
+          f"mean TTFT {eng.mean_ttft_steps():.1f} steps "
+          f"(chunk={eng.chunk}, budget={args.prefill_budget})")
     assert all(len(o) == args.tokens for o in outs)
+
+    # -- chunked prefill vs one-token path: steps to first token ------------
+    one = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len,
+                      prefill_chunk=1)
+    outs_one = one.generate(prompts, max_new_tokens=args.tokens)
+    assert outs_one == outs, "chunked prefill changed sampled tokens"
+    ttft_c, ttft_1 = eng.mean_ttft_steps(), one.mean_ttft_steps()
+    print(f"steps-to-first-token: {ttft_1:.1f} one-token -> {ttft_c:.1f} "
+          f"chunked ({ttft_1 / max(ttft_c, 1e-9):.1f}x fewer), "
+          f"identical tokens")
 
     # -- modeled: HBM bytes/token + v5e roofline bound ----------------------
     kv_packed = eng.kv_bytes()

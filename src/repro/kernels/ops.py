@@ -16,8 +16,9 @@ from .m2xfp_quantize import m2xfp_quantize_kernel
 from .mxfp4_matmul import mxfp4_matmul_kernel
 
 __all__ = [
-    "on_tpu", "m2xfp_matmul", "m2xfp_qmatmul", "mxfp4_matmul",
-    "m2xfp_quantize", "pack_w_sgem", "pack_w_mxfp4", "pack_x_elem_em",
+    "on_tpu", "serve_block_m", "m2xfp_matmul", "m2xfp_qmatmul",
+    "mxfp4_matmul", "m2xfp_quantize", "pack_w_sgem", "pack_w_mxfp4",
+    "pack_x_elem_em",
 ]
 
 
@@ -33,23 +34,41 @@ def _pad_rows(x: jax.Array, multiple: int):
     return x, m
 
 
-def m2xfp_matmul(x: jax.Array, w_packed: dict, *, block_m: int = 128,
+def serve_block_m(m: int, cap: int = 128) -> int:
+    """Row-block for a serve-path launch. Decode feeds B rows, chunked
+    prefill up to B*chunk — round the live row count up to the 8-row
+    sublane tile instead of padding every launch to the 128-row MXU block,
+    so a 24-row prefill chunk pads to 24 rows, not 128. Row padding never
+    changes live-row results (each output row depends only on its own
+    input row), so this is a pure launch-shape choice."""
+    if m >= cap:
+        return cap
+    return max(8, -(-m // 8) * 8)
+
+
+def m2xfp_matmul(x: jax.Array, w_packed: dict, *,
+                 block_m: int | None = None,
                  block_n: int = 128, block_k: int = 512) -> jax.Array:
-    """x (M, K) @ Sg-EM-packed W (K, N) -> f32 (M, N)."""
-    xp, m = _pad_rows(x, block_m if x.shape[0] > 8 else 8)
+    """x (M, K) @ Sg-EM-packed W (K, N) -> f32 (M, N).
+
+    ``block_m=None`` picks the row block from M via ``serve_block_m``."""
+    bm = serve_block_m(x.shape[0]) if block_m is None else block_m
+    xp, m = _pad_rows(x, bm)
     out = m2xfp_matmul_kernel(
         xp, w_packed["codes"], w_packed["scales"], w_packed["meta"],
-        bm=block_m, bn=block_n, bk=block_k, interpret=not on_tpu())
+        bm=bm, bn=block_n, bk=block_k, interpret=not on_tpu())
     return out[:m]
 
 
-def mxfp4_matmul(x: jax.Array, w_packed: dict, *, block_m: int = 128,
+def mxfp4_matmul(x: jax.Array, w_packed: dict, *,
+                 block_m: int | None = None,
                  block_n: int = 128, block_k: int = 512) -> jax.Array:
     """x (M, K) @ MXFP4-packed W (K, N) -> f32 (M, N)."""
-    xp, m = _pad_rows(x, block_m if x.shape[0] > 8 else 8)
+    bm = serve_block_m(x.shape[0]) if block_m is None else block_m
+    xp, m = _pad_rows(x, bm)
     out = mxfp4_matmul_kernel(
         xp, w_packed["codes"], w_packed["scales"],
-        bm=block_m, bn=block_n, bk=block_k, interpret=not on_tpu())
+        bm=bm, bn=block_n, bk=block_k, interpret=not on_tpu())
     return out[:m]
 
 

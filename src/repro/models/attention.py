@@ -206,51 +206,64 @@ def _row_update(buf: jax.Array, new: jax.Array, start: jax.Array) -> jax.Array:
         buf, new.astype(buf.dtype), (start,) + (0,) * (buf.ndim - 1))
 
 
-def attention_decode(
-    p: dict, x: jax.Array, cfg, cache: dict, index: jax.Array,
-    window=None, quant: str = "none",
-):
-    """One-token decode against a ring-buffer KV cache.
+def _masked_rows(old: jax.Array, new: jax.Array, valid) -> jax.Array:
+    """Per-row select: rows where ``valid`` take ``new``, others keep ``old``."""
+    if valid is None:
+        return new
+    return jnp.where(
+        valid.reshape((-1,) + (1,) * (old.ndim - 1)), new, old)
 
-    cache: {"k": (B,W,nkv,hd), "v": (B,W,nkv,hd), "pos": int32 (-1 = empty)}.
-    ``index``: absolute position of the new token — either a scalar (all
-    sequences at the same position, pos (W,)) or a (B,) vector for
-    continuous batching (each batch row is an independent request slot at
-    its own position; pos is then per-slot (B, W) — see repro.serve). The
-    cache is sequence-sharded ('kv_seq' -> TP axis); the softmax reduction
-    over W crosses shards (GSPMD ring-attention-equivalent)."""
-    b = x.shape[0]
+
+def _attend_one(q, k_new, v_new, out_dtype, cfg, cache, index, window,
+                valid=None):
+    """Write ONE token's K/V per row at ``index % W`` and attend ``q``
+    against the whole cache — the shared inner step of ``attention_decode``
+    (valid=None) and ``attention_prefill`` (``valid`` masks rows past the
+    slot's chunk length; their cache rows stay untouched and their context
+    output is garbage for the caller to discard).
+
+    q (B,1,nh,hd); k_new/v_new (B,1,nkv,hd); ``index`` scalar int32 or (B,)
+    (per-slot caches). Returns (ctx (B,1,nh*hd) in ``out_dtype`` — the
+    pre-``wo`` attention context, new cache dict). The cache is
+    sequence-sharded ('kv_seq' -> TP axis); the softmax reduction over W
+    crosses shards (GSPMD ring-attention-equivalent)."""
+    b = q.shape[0]
     quantized_kv = cfg.kv_quant == "m2xfp"
     w = (cache["k"]["codes"] if quantized_kv else cache["k"]).shape[1]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     per_slot = jnp.ndim(index) == 1
+    if valid is not None and not per_slot:
+        raise ValueError("masked cache writes need per-slot caches")
     if per_slot:
         pos_new = index.reshape(b, 1).astype(jnp.int32)
     else:
         pos_new = jnp.full((b, 1), index, dtype=jnp.int32)
-    q, k_new, v_new = _project_qkv(p, x, cfg, pos_new, quant)
 
     slot = jnp.mod(index, w)                       # scalar or (B,)
     if quantized_kv:
-        from .kvquant import kv_decode, kv_encode
+        from .kvquant import kv_decode, kv_encode, kv_page_write
         kc, vc = {}, {}
         for name, new, store in (("k", k_new, kc), ("v", v_new, vc)):
             enc = kv_encode(new)
+            if per_slot:
+                upd = kv_page_write(cache[name], enc, slot, valid)
+            else:
+                upd = {key: jax.lax.dynamic_update_slice(
+                    cache[name][key], enc[key], (0, slot, 0, 0))
+                    for key in ("codes", "scales", "meta")}
             for key in ("codes", "scales", "meta"):
-                if per_slot:
-                    store[key] = jax.vmap(_row_update)(
-                        cache[name][key], enc[key], slot)
-                else:
-                    store[key] = jax.lax.dynamic_update_slice(
-                        cache[name][key], enc[key], (0, slot, 0, 0))
                 store[key] = constrain(
-                    store[key], ("batch", "kv_seq", "kv_heads", None))
+                    upd[key], ("batch", "kv_seq", "kv_heads", None))
         k = kv_decode(kc)
         v = kv_decode(vc)
     else:
         if per_slot:
-            k = jax.vmap(_row_update)(cache["k"], k_new, slot)
-            v = jax.vmap(_row_update)(cache["v"], v_new, slot)
+            k = _masked_rows(
+                cache["k"], jax.vmap(_row_update)(cache["k"], k_new, slot),
+                valid)
+            v = _masked_rows(
+                cache["v"], jax.vmap(_row_update)(cache["v"], v_new, slot),
+                valid)
         else:
             k = jax.lax.dynamic_update_slice(
                 cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
@@ -258,7 +271,9 @@ def attention_decode(
                 cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
         kc, vc = k, v
     if per_slot:
-        pos = jax.vmap(_row_update)(cache["pos"], pos_new, slot)
+        pos = _masked_rows(
+            cache["pos"], jax.vmap(_row_update)(cache["pos"], pos_new, slot),
+            valid)
     else:
         pos = jax.lax.dynamic_update_slice(
             cache["pos"], jnp.full((1,), index, jnp.int32), (slot,))
@@ -274,16 +289,80 @@ def attention_decode(
     sc = softcap(sc, cfg.attn_softcap)
     pos2d = pos if per_slot else pos[None, :]      # (B, W) or (1, W)
     idx2d = index[:, None] if per_slot else index
-    valid = (pos2d >= 0) & (pos2d <= idx2d) & (idx2d - pos2d < eff_w)
-    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    valid_kv = (pos2d >= 0) & (pos2d <= idx2d) & (idx2d - pos2d < eff_w)
+    sc = jnp.where(valid_kv[:, None, None, :], sc, NEG_INF)
     sc = constrain(sc, ("batch", "kv_heads", None, "kv_seq"))
     probs = jax.nn.softmax(sc, axis=-1)
     out = einsum_f32acc("bkgw,bwkd->bkgd", probs.astype(jnp.bfloat16),
                         v.astype(jnp.bfloat16))
-    out = out.reshape(b, 1, nh * hd).astype(x.dtype)
+    ctx = out.reshape(b, 1, nh * hd).astype(out_dtype)
+    return ctx, {"k": kc, "v": vc, "pos": pos}
+
+
+def attention_decode(
+    p: dict, x: jax.Array, cfg, cache: dict, index: jax.Array,
+    window=None, quant: str = "none",
+):
+    """One-token decode against a ring-buffer KV cache.
+
+    cache: {"k": (B,W,nkv,hd), "v": (B,W,nkv,hd), "pos": int32 (-1 = empty)}.
+    ``index``: absolute position of the new token — either a scalar (all
+    sequences at the same position, pos (W,)) or a (B,) vector for
+    continuous batching (each batch row is an independent request slot at
+    its own position; pos is then per-slot (B, W) — see repro.serve)."""
+    b = x.shape[0]
+    per_slot = jnp.ndim(index) == 1
+    if per_slot:
+        pos_new = index.reshape(b, 1).astype(jnp.int32)
+    else:
+        pos_new = jnp.full((b, 1), index, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos_new, quant)
+    ctx, new_cache = _attend_one(q, k_new, v_new, x.dtype, cfg, cache,
+                                 index, window)
+    out = constrain(ctx, ("batch", "seq", "q_dim"))
+    out = quantized_matmul(out, p["wo"], quant, cfg.quant_format)
+    return out, new_cache
+
+
+def attention_prefill(
+    p: dict, x: jax.Array, cfg, cache: dict, index: jax.Array,
+    lengths: jax.Array, window=None, quant: str = "none",
+):
+    """Chunked-prefill attention: up to T new tokens per slot against the
+    per-slot paged cache in one call.
+
+    x (B,T,d); row b's valid tokens are ``x[b, :lengths[b]]`` at absolute
+    positions ``index[b] .. index[b]+lengths[b]-1`` (``lengths`` may be 0
+    for idle rows — their cache rows stay untouched and their outputs are
+    garbage for the caller to discard). The QKV and output projections run
+    ONCE over the whole chunk — the packed M2XFP weight streams cross HBM
+    once per chunk instead of once per token — while the cache write +
+    attend runs as a lax.scan of the exact single-token decode step
+    (write-then-attend per position, which also keeps ring-buffer overwrite
+    semantics exact for sliding windows narrower than the chunk), so every
+    position's output is bit-identical to T sequential ``attention_decode``
+    calls. Returns (out (B,T,d), new cache)."""
+    if jnp.ndim(index) != 1:
+        raise ValueError("attention_prefill needs per-slot caches "
+                         "((B,) index vector)")
+    t = x.shape[1]
+    offs = jnp.arange(t, dtype=jnp.int32)
+    positions = index[:, None] + offs[None, :]               # (B, T)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, quant)
+
+    def step(cache, xs):
+        q_t, k_t, v_t, off = xs
+        ctx, cache = _attend_one(q_t, k_t, v_t, x.dtype, cfg, cache,
+                                 index + off, window, valid=off < lengths)
+        return cache, ctx
+
+    # (B,T,...) -> per-position (B,1,...) scan slices, chunk axis leading
+    xs = tuple(jnp.moveaxis(a, 1, 0)[:, :, None] for a in (q, k_new, v_new))
+    cache, ctxs = jax.lax.scan(step, cache, xs + (offs,))
+    out = jnp.moveaxis(ctxs[:, :, 0], 0, 1)                  # (B,T,nh*hd)
     out = constrain(out, ("batch", "seq", "q_dim"))
     out = quantized_matmul(out, p["wo"], quant, cfg.quant_format)
-    return out, {"k": kc, "v": vc, "pos": pos}
+    return out, cache
 
 
 def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,

@@ -29,7 +29,7 @@ GROUP = 32
 SUBGROUP = 8
 N_SUB = GROUP // SUBGROUP
 
-__all__ = ["kv_encode", "kv_decode", "kv_cache_spec"]
+__all__ = ["kv_encode", "kv_decode", "kv_cache_spec", "kv_page_write"]
 
 
 def kv_encode(x: jax.Array) -> dict:
@@ -68,6 +68,30 @@ def kv_decode(p: dict) -> jax.Array:
     out = vals * mult.reshape(*codes.shape[:-1], hd // GROUP, N_SUB, 1) \
         * s[..., None]
     return out.reshape(*codes.shape[:-1], hd).astype(jnp.bfloat16)
+
+
+def kv_page_write(page: dict, enc: dict, slot: jax.Array,
+                  valid: jax.Array | None = None) -> dict:
+    """Vectorized per-slot ring write of one encoded token per batch row.
+
+    ``page``: a packed K or V page — {"codes", "scales", "meta"} u8 streams
+    with leading (B, W) axes. ``enc``: ``kv_encode`` output with leading
+    (B, 1). ``slot`` (B,): ring offset per row (``index % W``). ``valid``
+    (B,) bool, optional: rows with False keep their page bytes untouched —
+    the masked write the chunked-prefill path uses for positions past a
+    slot's chunk length. Returns the updated page dict."""
+    def write(buf, new):
+        upd = jax.vmap(
+            lambda b, n, s: jax.lax.dynamic_update_slice(
+                b, n.astype(b.dtype), (s,) + (0,) * (b.ndim - 1))
+        )(buf, new, slot)
+        if valid is None:
+            return upd
+        return jnp.where(
+            valid.reshape((-1,) + (1,) * (buf.ndim - 1)), upd, buf)
+
+    return {key: write(page[key], enc[key])
+            for key in ("codes", "scales", "meta")}
 
 
 def kv_cache_spec(batch: int, w: int, nkv: int, hd: int) -> dict:

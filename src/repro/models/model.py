@@ -34,8 +34,8 @@ from .moe import init_moe, moe_apply
 from .quant import pack_serving_weight
 
 __all__ = [
-    "init_params", "forward", "decode_step", "loss_fn", "init_caches",
-    "pack_params_for_serving", "layer_windows",
+    "init_params", "forward", "decode_step", "prefill_chunk", "loss_fn",
+    "init_caches", "pack_params_for_serving", "layer_windows",
 ]
 
 
@@ -131,6 +131,19 @@ def _attn_block_decode(p, h, cfg, cache, index, window, quant):
     eff_w = jnp.where(window > 0, window, jnp.int32(2 ** 30))
     out, new_cache = attn.attention_decode(
         p["attn"], x, cfg, cache, index, window=eff_w, quant=quant)
+    h = h + out
+    x = rms_norm(h, p["ffn_norm"], cfg.norm_eps)
+    ffn = moe_apply(p["ffn"], x, cfg, quant) if cfg.is_moe else \
+        mlp_apply(p["ffn"], x, quant, cfg.quant_format)
+    return h + ffn, new_cache
+
+
+def _attn_block_prefill(p, h, cfg, cache, index, lengths, window, quant):
+    """Chunked-prefill twin of ``_attn_block_decode``: h is (B, T, d)."""
+    x = rms_norm(h, p["attn_norm"], cfg.norm_eps)
+    eff_w = jnp.where(window > 0, window, jnp.int32(2 ** 30))
+    out, new_cache = attn.attention_prefill(
+        p["attn"], x, cfg, cache, index, lengths, window=eff_w, quant=quant)
     h = h + out
     x = rms_norm(h, p["ffn_norm"], cfg.norm_eps)
     ffn = moe_apply(p["ffn"], x, cfg, quant) if cfg.is_moe else \
@@ -364,6 +377,63 @@ def decode_step(params: dict, cfg, batch: dict, caches: dict,
     def body(h, xs):
         lp, w, c = xs
         hn, nc = _attn_block_decode(lp, h, cfg, c, index, w, quant)
+        return hn, nc
+
+    h, nc = jax.lax.scan(body, h, (params["layers"], windows,
+                                   caches["layers"]))
+    return _logits(params, cfg, h), {"layers": nc}
+
+
+def prefill_chunk(params: dict, cfg, batch: dict, caches: dict,
+                  index: jax.Array, lengths: jax.Array):
+    """Chunked prefill for the serving engine: up to T prompt tokens per
+    slot in ONE launch through the same fused dequant-GEMM path as
+    ``decode_step``.
+
+    batch: {"tokens": (B, T)}; ``index`` (B,): absolute position of column
+    0 per slot; ``lengths`` (B,): valid tokens per row, 0..T (0 = idle row,
+    its caches are untouched). Requires per-slot caches
+    (``init_caches(..., per_slot=True)``).
+
+    Returns (logits (B, T, V), caches). ``logits[b, t]`` for t <
+    ``lengths[b]`` is bit-identical to what ``decode_step`` would emit
+    feeding the same tokens one at a time (the serve parity tests pin
+    this); positions at or past ``lengths[b]`` are garbage to discard.
+
+    Attention families only — ssm/hybrid recurrent state is inherently
+    sequential per token, so the serve engine falls back to one-token
+    teacher forcing there."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"chunked prefill needs attention caches; family "
+            f"{cfg.family!r} decodes one token at a time")
+    h = _embed_in(params, cfg, batch)
+    quant = cfg.quant
+
+    windows = layer_windows(cfg)
+    if cfg.local_global:
+        n_pairs = cfg.n_layers // 2
+        pair_params = jax.tree.map(
+            lambda a: a.reshape(n_pairs, 2, *a.shape[1:]), params["layers"])
+        w_local = jnp.int32(cfg.sliding_window or 4096)
+
+        def pair_body(h, xs):
+            lp, cl, cg = xs
+            p_loc = jax.tree.map(lambda a: a[0], lp)
+            p_glo = jax.tree.map(lambda a: a[1], lp)
+            h, cl = _attn_block_prefill(p_loc, h, cfg, cl, index, lengths,
+                                        w_local, quant)
+            h, cg = _attn_block_prefill(p_glo, h, cfg, cg, index, lengths,
+                                        jnp.int32(0), quant)
+            return h, (cl, cg)
+
+        h, (cl, cg) = jax.lax.scan(
+            pair_body, h, (pair_params, caches["local"], caches["global"]))
+        return _logits(params, cfg, h), {"local": cl, "global": cg}
+
+    def body(h, xs):
+        lp, w, c = xs
+        hn, nc = _attn_block_prefill(lp, h, cfg, c, index, lengths, w, quant)
         return hn, nc
 
     h, nc = jax.lax.scan(body, h, (params["layers"], windows,

@@ -10,12 +10,22 @@ The engine owns:
     position track, admitted/evicted independently (continuous batching);
     with ``cfg.kv_quant == 'm2xfp'`` pages hold packed Sg-EM streams;
   * a host-side ``SlotScheduler`` deciding which request occupies which
-    slot each step.
+    slot each step and how many tokens each slot consumes.
 
-Every decode step runs ONE jitted ``decode_step`` over all slots with a
-(B,) per-slot position vector. Prompts are teacher-forced through the same
-decode step (one prompt token consumed per step), so a newly admitted
-request prefils while its neighbours keep generating — no batch-wide stall.
+Every step runs ONE jitted launch over all slots. Slots in the decode
+phase consume one token each; newly admitted requests **prefill in chunks**
+of up to ``prefill_chunk`` prompt tokens per step through
+``repro.models.model.prefill_chunk`` — the packed weight streams cross HBM
+once per chunk instead of once per prompt token, which is what makes
+time-to-first-token scale with ``ceil(prompt / chunk)`` instead of
+``prompt``. A mixed step (some slots prefilling, some decoding) is a single
+``prefill_chunk`` launch with a per-slot chunk-length vector: decode slots
+carry length 1, idle slots length 0 (masked out of every cache write). When
+every planned length is 1 the engine uses the plain ``decode_step`` launch.
+Both paths are bit-identical per token — pinned by tests/test_serve.py.
+
+The scheduler's ``plan_chunks`` token-budget policy caps total prefill
+tokens per step so a long prompt cannot starve decoding neighbours.
 Slots whose request finished keep ticking on a dummy token until the
 scheduler refills them; admit-time reset invalidates the slot's position
 track (which masks every stale KV entry) and re-initializes recurrent
@@ -31,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import model as _model
 from repro.models.model import decode_step, init_caches
 
 from .scheduler import Request, SlotScheduler
@@ -47,16 +58,32 @@ def tree_nbytes(tree) -> int:
 @dataclasses.dataclass
 class ServeStats:
     n_slots: int = 1
-    steps: int = 0                 # decode steps launched
-    slot_steps: int = 0            # sum over steps of active slots
-    prefill_tokens: int = 0        # prompt tokens teacher-forced
+    steps: int = 0                 # launches (decode or mixed prefill)
+    decode_steps: int = 0          # pure one-token launches
+    prefill_steps: int = 0         # launches that carried prefill chunks
+    slot_steps: int = 0            # sum over steps of slots making progress
+    prefill_tokens: int = 0        # prompt tokens fed (excl. sampling step)
     generated_tokens: int = 0      # tokens sampled and returned
     wall_s: float = 0.0
+    prefill_wall_s: float = 0.0    # wall attributed to prefill launches
+    decode_wall_s: float = 0.0     # wall attributed to pure decode launches
 
     @property
     def tokens_per_sec(self) -> float:
         total = self.prefill_tokens + self.generated_tokens
         return total / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def prefill_tokens_per_sec(self) -> float:
+        if self.prefill_wall_s <= 0:
+            return 0.0
+        return self.prefill_tokens / self.prefill_wall_s
+
+    @property
+    def decode_tokens_per_sec(self) -> float:
+        if self.decode_wall_s <= 0:
+            return 0.0
+        return self.generated_tokens / self.decode_wall_s
 
     @property
     def occupancy(self) -> float:
@@ -104,21 +131,34 @@ class ServeEngine:
         sliding-window config bounds the page at the window instead).
     sample_fn : (B, V) float32 logits -> (B,) int32 token ids; greedy
         argmax by default (deterministic — what the parity tests pin).
+    prefill_chunk : max prompt tokens consumed per slot per step. 1
+        recovers the legacy one-token teacher forcing (and is forced for
+        the recurrent ssm/hybrid families, whose per-token state updates
+        cannot batch along the sequence).
+    prefill_budget : cap on total prefill tokens per step across all slots
+        (None = unlimited) so prefill-heavy traffic cannot starve decoding
+        slots; the oldest prefilling request always progresses.
     """
 
     def __init__(self, params, cfg, n_slots: int = 8, max_len: int = 256,
-                 sample_fn: Optional[Callable] = None):
+                 sample_fn: Optional[Callable] = None,
+                 prefill_chunk: int = 8,
+                 prefill_budget: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.sample_fn = sample_fn or _greedy
+        self.chunk = max(1, int(prefill_chunk))
+        if cfg.family in ("ssm", "hybrid"):
+            self.chunk = 1           # recurrent state updates token by token
+        self.prefill_budget = prefill_budget
         self.scheduler = SlotScheduler(n_slots)
         self.stats = ServeStats(n_slots=n_slots)
 
         self.caches = init_caches(cfg, n_slots, max_len, per_slot=True)
         # host-side per-slot state
-        self._tokens = np.zeros((n_slots, 1), np.int32)   # next input token
+        self._tokens = np.zeros((n_slots, 1), np.int32)   # last sampled token
         self._index = np.zeros((n_slots,), np.int32)      # absolute position
 
         # donate the cache pool: decode updates it in place instead of
@@ -126,6 +166,9 @@ class ServeEngine:
         # ignores donation with a harmless warning)
         self._step = jax.jit(
             lambda p, b, c, i: decode_step(p, cfg, b, c, i),
+            donate_argnums=(2,))
+        self._prefill = jax.jit(
+            lambda p, b, c, i, l: _model.prefill_chunk(p, cfg, b, c, i, l),
             donate_argnums=(2,))
         self._reset = jax.jit(_reset_slot, donate_argnums=(0,))
 
@@ -146,38 +189,90 @@ class ServeEngine:
             slot = req.slot
             self.caches = self._reset(self.caches, jnp.int32(slot))
             self._index[slot] = 0
-            self._tokens[slot, 0] = req.prompt[0]
 
     # -- decode loop -------------------------------------------------------
 
-    def step(self) -> int:
-        """Admit, run one batched decode step, route tokens. Returns the
-        number of requests that finished this step."""
-        self._admit()
-        if not self.scheduler.active:
-            return 0
+    def _launch_decode(self, chunks) -> np.ndarray:
+        """One-token launch for every slot. Returns (B, V) f32 logits at
+        each slot's (single) position."""
+        for slot, req in self.scheduler.active.items():
+            if req.phase == "prefill":
+                self._tokens[slot, 0] = req.prompt[req.consumed]
         logits, self.caches = self._step(
             self.params, {"tokens": jnp.asarray(self._tokens)}, self.caches,
             jnp.asarray(self._index))
-        sampled = self.sample_fn(
-            np.asarray(logits[:, -1]).astype(np.float32))
+        return np.asarray(logits[:, -1]).astype(np.float32)
+
+    def _launch_prefill(self, chunks) -> np.ndarray:
+        """Mixed chunked launch: prefilling slots consume their planned
+        chunk, decode slots their next token, idle / budget-starved slots
+        are masked out (length 0). Returns (B, V) f32 logits at each slot's
+        last valid position."""
+        toks = np.zeros((self.n_slots, self.chunk), np.int32)
+        lens = np.zeros((self.n_slots,), np.int32)
+        for slot, req in self.scheduler.active.items():
+            c = chunks.get(slot, 0)
+            if c == 0:
+                continue
+            lens[slot] = c
+            if req.phase == "prefill":
+                toks[slot, :c] = req.prompt[req.consumed:req.consumed + c]
+            else:
+                toks[slot, 0] = self._tokens[slot, 0]
+        logits, self.caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+            jnp.asarray(self._index), jnp.asarray(lens))
+        lg = np.asarray(logits).astype(np.float32)        # (B, T, V)
+        return lg[np.arange(self.n_slots), np.maximum(lens - 1, 0)]
+
+    def step(self) -> int:
+        """Admit, plan per-slot chunks, run one batched launch, route
+        tokens. Returns the number of requests that finished this step."""
+        self._admit()
+        if not self.scheduler.active:
+            return 0
+        chunks = self.scheduler.plan_chunks(self.chunk, self.prefill_budget)
+        decode_only = all(c == 1 for c in chunks.values())
+        t0 = time.perf_counter()
+        if decode_only:
+            sampled_from = self._launch_decode(chunks)
+        else:
+            sampled_from = self._launch_prefill(chunks)
+        dt = time.perf_counter() - t0
+        sampled = self.sample_fn(sampled_from)
 
         finished = 0
         self.stats.steps += 1
-        self.stats.slot_steps += len(self.scheduler.active)
+        if decode_only:
+            self.stats.decode_steps += 1
+            self.stats.decode_wall_s += dt
+        else:
+            self.stats.prefill_steps += 1
+            self.stats.prefill_wall_s += dt
         for slot, req in list(self.scheduler.active.items()):
-            consumed = self._index[slot] + 1       # tokens fed so far
-            if consumed < len(req.prompt):
-                # still prefilling: teacher-force the next prompt token
-                # (the emitted token is discarded)
-                self._tokens[slot, 0] = req.prompt[consumed]
-                self.stats.prefill_tokens += 1
-            else:
-                tok = int(sampled[slot])
-                req.output.append(tok)
-                self._tokens[slot, 0] = tok
+            c = chunks.get(slot, 0)
+            if c == 0:
+                continue                       # budget-starved: no progress
+            self.stats.slot_steps += 1
+            if req.phase == "prefill":
+                req.consumed += c
+                still_prefilling = req.consumed < len(req.prompt)
+                self.stats.prefill_tokens += c - (0 if still_prefilling
+                                                  else 1)
+                if still_prefilling:
+                    self._index[slot] += c
+                    continue                   # logits discarded
+                # the chunk ended on the last prompt token: its logits
+                # sample the first generated token
                 self.stats.generated_tokens += 1
-            self._index[slot] += 1
+            else:
+                self.stats.generated_tokens += 1
+            tok = int(sampled[slot])
+            req.output.append(tok)
+            if req.first_token_step < 0:
+                req.first_token_step = self.stats.steps
+            self._tokens[slot, 0] = tok
+            self._index[slot] += c
             if req.done:
                 self.scheduler.evict(slot, self.stats.steps)
                 finished += 1
@@ -203,6 +298,16 @@ class ServeEngine:
         return [r.output for r in reqs]
 
     # -- accounting --------------------------------------------------------
+
+    def mean_ttft_steps(self) -> float:
+        """Mean steps from admission to first sampled token over every
+        request that produced output (chunked prefill drives this down from
+        ~prompt_len to ~ceil(prompt_len / prefill_chunk))."""
+        ttfts = [r.ttft_steps for r in self.scheduler.finished
+                 if r.ttft_steps >= 0]
+        ttfts += [r.ttft_steps for r in self.scheduler.active.values()
+                  if r.ttft_steps >= 0]
+        return float(np.mean(ttfts)) if ttfts else 0.0
 
     def weight_bytes(self) -> int:
         return tree_nbytes(self.params)

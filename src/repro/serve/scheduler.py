@@ -18,18 +18,22 @@ import itertools
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
-__all__ = ["Request", "SlotScheduler", "QUEUED", "RUNNING", "FINISHED"]
+__all__ = ["Request", "SlotScheduler", "QUEUED", "RUNNING", "FINISHED",
+           "PREFILL", "DECODE"]
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+PREFILL, DECODE = "prefill", "decode"
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request.
 
-    prompt tokens are teacher-forced through the decode step (each step
-    consumes one prompt token); afterwards the model's sampled tokens are
-    appended to ``output`` until ``max_new_tokens`` (or ``eos_id``).
+    A running request moves through two phases: **prefill**, while
+    ``consumed`` (prompt tokens fed to the model) is short of the prompt —
+    the engine feeds up to ``prefill_chunk`` prompt tokens per step — then
+    **decode**, where each step appends one sampled token to ``output``
+    until ``max_new_tokens`` (or ``eos_id``).
     """
 
     rid: int
@@ -39,14 +43,28 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     state: str = QUEUED
+    consumed: int = 0               # prompt tokens fed so far
     admit_step: int = -1
+    first_token_step: int = -1      # engine step that sampled output[0]
     finish_step: int = -1
+
+    @property
+    def phase(self) -> str:
+        """'prefill' while prompt tokens remain to feed, else 'decode'."""
+        return PREFILL if self.consumed < len(self.prompt) else DECODE
 
     @property
     def done(self) -> bool:
         if len(self.output) >= self.max_new_tokens:
             return True
         return bool(self.output) and self.output[-1] == self.eos_id
+
+    @property
+    def ttft_steps(self) -> int:
+        """Engine steps from admission to the first sampled token."""
+        if self.first_token_step < 0:
+            return -1
+        return self.first_token_step - self.admit_step
 
 
 class SlotScheduler:
@@ -91,6 +109,41 @@ class SlotScheduler:
         self.finished.append(req)
         return req
 
+    def plan_chunks(self, max_chunk: int,
+                    token_budget: Optional[int] = None) -> Dict[int, int]:
+        """Per-slot token counts for the engine's next step — the
+        prefill/decode mixing policy.
+
+        Decode-phase slots always get 1 (their next sampled token is never
+        starved by prefill work). Prefill-phase slots split ``token_budget``
+        prompt tokens per step (None = unlimited), oldest admission first,
+        each receiving up to ``max_chunk`` tokens; the oldest prefilling
+        request always receives at least one token even when the budget is
+        exhausted (liveness). A slot may be planned 0 tokens (budget
+        starvation) — the engine masks it out of the launch entirely."""
+        if max_chunk < 1:
+            raise ValueError("max_chunk must be >= 1")
+        plan: Dict[int, int] = {}
+        prefilling = []
+        for slot, req in self.active.items():
+            if req.phase == DECODE:
+                plan[slot] = 1
+            else:
+                prefilling.append(req)
+        prefilling.sort(key=lambda r: (r.admit_step, r.rid))
+        remaining = token_budget
+        for i, req in enumerate(prefilling):
+            want = min(max_chunk, len(req.prompt) - req.consumed)
+            if remaining is None:
+                give = want
+            else:
+                give = min(want, remaining)
+                if i == 0:
+                    give = max(give, 1)          # liveness floor
+                remaining = max(0, remaining - give)
+            plan[req.slot] = give
+        return plan
+
     @property
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.active)
@@ -107,7 +160,9 @@ class SlotScheduler:
         assert set(self.free) | set(self.active) == set(range(self.n_slots))
         for slot, req in self.active.items():
             assert req.slot == slot and req.state == RUNNING
+            assert 0 <= req.consumed <= len(req.prompt), "consumed overran"
         for req in self.queue:
             assert req.slot is None and req.state == QUEUED
+            assert req.consumed == 0 and not req.output
         for req in self.finished:
             assert req.slot is None and req.state == FINISHED

@@ -111,6 +111,91 @@ def test_bitmath_matches_luts():
     assert jnp.array_equal(bitmath.rtne_fp6(xs), round_to_grid(xs, FP6_E2M3))
 
 
+# ---------------------------------------------------------------------------
+# Conformance matrix: Pallas vs reference, bit-exactness domain
+# ---------------------------------------------------------------------------
+# Bit-exactness holds while kernel and reference reduce the contraction in
+# the same order — empirically K <= 256 on this backend (XLA's dot starts
+# partitioning the K panel around 512, and kernel split-K engages past
+# block_k). Beyond that, conformance is a tight allclose (f32 accumulation
+# reordering, last-ulp), not equality.
+
+CONF_MS = [1, 3, 8, 9, 24, 100, 129]          # incl. non-multiples of 8/128
+CONF_KNS = [(64, 128), (256, 128), (128, 256)]
+
+
+@pytest.mark.parametrize("m", CONF_MS)
+@pytest.mark.parametrize("k,n", CONF_KNS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_m2xfp_matmul_conformance_bitexact(m, k, n, dtype):
+    """Adaptive-block launches are bit-equal to the XLA reference for every
+    row count — the invariant the chunked-prefill serve path relies on
+    (decode feeds B rows, prefill B*chunk rows, same results per row)."""
+    x, w = _data(m, k, n, dtype, seed=m)
+    wp = pack_w_sgem(w)
+    out_k = ops.m2xfp_matmul(x, wp)            # block_m picked from M
+    out_r = ref.m2xfp_matmul_ref(x, wp)
+    assert out_k.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("k", [512, 1024])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_m2xfp_matmul_conformance_large_k(k, dtype):
+    """Large K reorders the f32 accumulation (XLA panel partitioning at
+    K=512, kernel split-K at K > block_k): tightly allclose, not
+    bit-equal."""
+    m, n = 16, 128
+    x, w = _data(m, k, n, dtype, seed=9)
+    wp = pack_w_sgem(w)
+    out_k = ops.m2xfp_matmul(x, wp, block_k=512)
+    out_r = ref.m2xfp_matmul_ref(x, wp)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_serve_block_m_policy():
+    assert [ops.serve_block_m(m) for m in (1, 8, 9, 24, 100, 128, 500)] \
+        == [8, 8, 16, 24, 104, 128, 128]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_serve_matmul_backend_conformance(monkeypatch, dtype):
+    """Both REPRO_SERVE_KERNEL settings produce bit-identical serve GEMM
+    results (the Pallas kernel vs its pure-XLA mirror), for decode-like
+    (M=2) and prefill-like (M=2*8 chunk rows) launches."""
+    from repro.models.quant import pack_serving_weight, quantized_matmul
+    rng = np.random.default_rng(11)
+    k, n = 128, 128
+    w = jnp.asarray((rng.standard_normal((k, n)) * 0.05).astype(np.float32))
+    wp = pack_serving_weight(w)
+    for rows in (2, 16):
+        x = jnp.asarray(rng.standard_normal((rows, k)).astype(np.float32)
+                        ).astype(dtype)
+        by_mode = {}
+        for mode in ("xla", "pallas"):
+            monkeypatch.setenv("REPRO_SERVE_KERNEL", mode)
+            by_mode[mode] = np.asarray(
+                quantized_matmul(x, wp, "serve").astype(jnp.float32))
+        np.testing.assert_array_equal(by_mode["xla"], by_mode["pallas"])
+
+
+def test_serve_matmul_untileable_shape_falls_back(monkeypatch):
+    """REPRO_SERVE_KERNEL=pallas with N not a multiple of 128 must fall
+    back to the XLA mirror (Mosaic lane constraint), not crash."""
+    from repro.models.quant import pack_serving_weight, quantized_matmul
+    rng = np.random.default_rng(13)
+    k, n = 64, 96
+    w = jnp.asarray((rng.standard_normal((k, n)) * 0.05).astype(np.float32))
+    wp = pack_serving_weight(w)
+    x = jnp.asarray(rng.standard_normal((4, k)).astype(np.float32))
+    monkeypatch.setenv("REPRO_SERVE_KERNEL", "pallas")
+    got = np.asarray(quantized_matmul(x, wp, "serve").astype(jnp.float32))
+    monkeypatch.setenv("REPRO_SERVE_KERNEL", "xla")
+    want = np.asarray(quantized_matmul(x, wp, "serve").astype(jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
 @pytest.mark.parametrize("window,softcap", [(1 << 30, None), (48, None),
                                             (1 << 30, 8.0)])
 def test_flash_attention_kernel_vs_dense(window, softcap):

@@ -13,11 +13,24 @@ from repro.core import (
     quantize_weight_m2xfp, round_to_grid, shared_scale_exponent,
 )
 from repro.core.m2xfp import encode_act_m2xfp, decode_act_m2xfp
+from repro.core.packing import (
+    pack_meta2, pack_nibbles, unpack_meta2, unpack_nibbles,
+)
+from repro.models.kvquant import kv_decode, kv_encode
 
 _f32 = hnp.arrays(
     np.float32, st.tuples(st.integers(1, 4), st.just(64)),
     elements=st.floats(-1e4, 1e4, width=32, allow_nan=False,
                        allow_infinity=False))
+
+# full finite f32 range incl. subnormals and +-0 — what a KV page may see
+_f32_extreme = hnp.arrays(
+    np.float32, st.tuples(st.integers(1, 3), st.just(64)),
+    elements=st.floats(width=32, allow_nan=False, allow_infinity=False,
+                       allow_subnormal=True))
+
+_u8 = hnp.arrays(np.uint8, st.tuples(st.integers(1, 4), st.just(32)),
+                 elements=st.integers(0, 255))
 
 
 @settings(max_examples=30, deadline=None)
@@ -107,6 +120,85 @@ def test_fp6_round_is_nearest(v):
     grid = np.concatenate([-grid[::-1], grid])
     best = float(grid[np.argmin(np.abs(grid - v))])
     assert abs(got - v) <= abs(best - v) + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Packing-layer idempotence and KV-cache (Sg-EM) encode bounds
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(_u8)
+def test_pack_unpack_pack_idempotent(stream):
+    """The bit-level packers are exact inverses in both directions:
+    pack(unpack(bytes)) == bytes for any byte stream, and
+    unpack(pack(codes)) == codes for any in-range code array. (Idempotence
+    does NOT hold at the value layer — re-encoding a dequantized tensor
+    may re-round; see test_m2xfp_act_near_idempotent.)"""
+    s = jnp.asarray(stream)
+    assert jnp.array_equal(pack_nibbles(unpack_nibbles(s)), s)
+    assert jnp.array_equal(pack_meta2(unpack_meta2(s, 4 * s.shape[-1])), s)
+    codes = unpack_nibbles(s)                # arbitrary 4-bit codes
+    assert jnp.array_equal(unpack_nibbles(pack_nibbles(codes)), codes)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_f32_extreme)
+def test_kv_roundtrip_finite_and_sign_preserving(x):
+    """KV decode is total: for ANY finite f32 page content — subnormals,
+    +-0, max-exponent values — the Sg-EM round-trip is finite, NaN-free
+    and never flips a sign. Exact zeros decode to exact zeros."""
+    xj = jnp.asarray(x)
+    dq = kv_decode(kv_encode(xj)).astype(jnp.float32)
+    assert bool(jnp.all(jnp.isfinite(dq)))
+    assert bool(jnp.all(xj * dq >= 0))
+    assert bool(jnp.all(jnp.where(xj == 0, dq == 0, True)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_f32_extreme)
+def test_kv_scale_bytes_in_e8m0_range(x):
+    """Encoded E8M0 scale bytes stay in [1, 254]: the exponent clamp means
+    the 0 byte (2^-127 would alias) and the 255 NaN code are never
+    produced, so decode never manufactures a NaN from a valid page."""
+    enc = kv_encode(jnp.asarray(x))
+    sb = enc["scales"]
+    assert bool(jnp.all((sb >= 1) & (sb <= 254)))
+    # streams have the advertised 4.5 bits/elem footprint
+    n = x.size
+    assert enc["codes"].size == n // 2
+    assert enc["scales"].size == enc["meta"].size == n // 32
+
+
+@settings(max_examples=25, deadline=None)
+@given(_f32)
+def test_kv_reencode_drift_bounded(x):
+    """Re-encoding a decoded KV page moves values by at most half an FP4
+    step at the group scale (0.5 * 2^e): the round-trip is stable, it
+    cannot walk values away under repeated quantization."""
+    d1 = kv_decode(kv_encode(jnp.asarray(x))).astype(jnp.float32)
+    d2 = kv_decode(kv_encode(d1)).astype(jnp.float32)
+    g1 = d1.reshape(-1, 32)
+    amax = jnp.max(jnp.abs(g1), axis=-1, keepdims=True)
+    s = jnp.exp2(shared_scale_exponent(amax, "floor").astype(jnp.float32))
+    drift = jnp.abs(d2.reshape(-1, 32) - g1)
+    # relative slack: the 0.5*s bound is attained exactly, modulo f32 ulps
+    assert bool(jnp.all(drift <= 0.5 * s * 1.00001 + 1e-7))
+
+
+def test_kv_edge_values_exact():
+    """Pinned edge rows (not strategies, so they always run): min
+    subnormal, min normal, -0.0 and f32 max all survive the round-trip
+    finite; the all-zero row is reproduced exactly."""
+    edges = np.zeros((4, 64), np.float32)
+    edges[1, :] = np.float32(1e-45)
+    edges[2, ::2] = np.float32(-0.0)
+    edges[2, 1::2] = np.finfo(np.float32).tiny
+    edges[3, :] = np.finfo(np.float32).max
+    dq = np.asarray(kv_decode(kv_encode(jnp.asarray(edges)))
+                    .astype(jnp.float32))
+    assert np.isfinite(dq).all() and not np.isnan(dq).any()
+    assert (dq[0] == 0).all()
+    assert (dq * edges >= 0).all()
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,5 +1,6 @@
 """Serving engine tests: packed-checkpoint bit-exactness, batched-decode
-parity vs the single-request serve path, scheduler invariants."""
+parity vs the single-request serve path, chunked-prefill bit-identity,
+scheduler invariants + fuzz."""
 import dataclasses
 
 import jax
@@ -8,7 +9,9 @@ import numpy as np
 import pytest
 
 from repro.models.config import ModelConfig
-from repro.models.model import decode_step, init_caches, init_params
+from repro.models.model import (
+    decode_step, init_caches, init_params, prefill_chunk,
+)
 from repro.models.quant import PackedWeight
 from repro.serve import (
     ServeEngine, SlotScheduler, load_packed_checkpoint, prequantize_params,
@@ -140,6 +143,171 @@ def test_slot_reuse_does_not_leak_state(packed_model):
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: bit-identity with the one-token path
+# ---------------------------------------------------------------------------
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 8])
+@pytest.mark.parametrize("kw", [
+    {}, {"kv_quant": "m2xfp"}, {"sliding_window": 4},
+], ids=["dense", "kvq", "slide"])
+def test_prefill_chunk_bitexact_caches_and_logits(packed_model, chunk, kw):
+    """``prefill_chunk`` over T tokens leaves caches AND logits bit-equal
+    to T sequential ``decode_step`` calls — including packed Sg-EM KV pages
+    and a sliding window narrower than the chunk (ring overwrite order)."""
+    cfg, params, _ = packed_model
+    qcfg = dataclasses.replace(cfg, **kw)
+    packed = prequantize_params(params, qcfg)
+    rng = np.random.default_rng(17)
+    b, p_len, w = 2, 7, 16
+    toks = rng.integers(0, qcfg.vocab_size, (b, p_len)).astype(np.int32)
+
+    # reference: one token at a time through decode_step
+    ref_caches = init_caches(qcfg, b, w, per_slot=True)
+    ref_logits = None
+    for t in range(p_len):
+        ref_logits, ref_caches = decode_step(
+            packed, qcfg, {"tokens": jnp.asarray(toks[:, t:t + 1])},
+            ref_caches, jnp.full((b,), t, jnp.int32))
+
+    # chunked: same tokens in chunks of `chunk`
+    caches = init_caches(qcfg, b, w, per_slot=True)
+    logits, last_c = None, 0
+    for start in range(0, p_len, chunk):
+        last_c = min(chunk, p_len - start)
+        block = np.zeros((b, chunk), np.int32)
+        block[:, :last_c] = toks[:, start:start + last_c]
+        logits, caches = prefill_chunk(
+            packed, qcfg, {"tokens": jnp.asarray(block)}, caches,
+            jnp.full((b,), start, jnp.int32),
+            jnp.full((b,), last_c, jnp.int32))
+    _assert_trees_equal(caches, ref_caches)
+    np.testing.assert_array_equal(np.asarray(logits[:, last_c - 1]),
+                                  np.asarray(ref_logits[:, -1]))
+
+
+def test_prefill_chunk_ragged_lengths(packed_model):
+    """One launch, per-slot lengths {1, 3, 8, 0}: every live slot's cache
+    rows and last-position logits match a batch that fed exactly that many
+    tokens sequentially; the length-0 slot's rows stay bit-equal to init
+    (no masked write leaks)."""
+    cfg, _, packed = packed_model
+    rng = np.random.default_rng(23)
+    b, t_max, w = 4, 8, 16
+    lens = np.array([1, 3, 8, 0], np.int32)
+    toks = rng.integers(0, cfg.vocab_size, (b, t_max)).astype(np.int32)
+
+    caches = init_caches(cfg, b, w, per_slot=True)
+    logits, caches = prefill_chunk(
+        packed, cfg, {"tokens": jnp.asarray(toks)}, caches,
+        jnp.zeros((b,), jnp.int32), jnp.asarray(lens))
+    lg = np.asarray(logits, np.float32)
+
+    ref_caches = init_caches(cfg, b, w, per_slot=True)
+    for t in range(t_max):
+        ref_lg, ref_caches = decode_step(
+            packed, cfg, {"tokens": jnp.asarray(toks[:, t:t + 1])},
+            ref_caches, jnp.full((b,), t, jnp.int32))
+        # rows whose chunk ends here: logits and cache rows must match now
+        for row in np.flatnonzero(lens == t + 1):
+            np.testing.assert_array_equal(
+                lg[row, t], np.asarray(ref_lg[:, -1], np.float32)[row])
+            for leaf, ref in zip(jax.tree.leaves(caches),
+                                 jax.tree.leaves(ref_caches)):
+                np.testing.assert_array_equal(np.asarray(leaf[:, row]),
+                                              np.asarray(ref[:, row]))
+    # length-0 slot: bit-identical to init
+    init = init_caches(cfg, b, w, per_slot=True)
+    for leaf, ref in zip(jax.tree.leaves(caches), jax.tree.leaves(init)):
+        np.testing.assert_array_equal(np.asarray(leaf[:, 3]),
+                                      np.asarray(ref[:, 3]))
+
+
+@pytest.mark.smoke
+@pytest.mark.parametrize("chunk", [3, 8])
+def test_chunked_engine_matches_one_token_engine(packed_model, chunk):
+    """Engine end-to-end: chunked prefill generates exactly the tokens of
+    the legacy one-token path (same traffic, same slots)."""
+    cfg, _, packed = packed_model
+    rng = np.random.default_rng(29)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in (1, 3, 8, 12, 5)]
+    legacy = ServeEngine(packed, cfg, n_slots=2, max_len=32, prefill_chunk=1)
+    chunked = ServeEngine(packed, cfg, n_slots=2, max_len=32,
+                          prefill_chunk=chunk)
+    ref = legacy.generate(prompts, max_new_tokens=4)
+    got = chunked.generate(prompts, max_new_tokens=4)
+    assert got == ref
+    chunked.scheduler.check()
+    assert chunked.stats.steps < legacy.stats.steps
+
+
+def test_chunked_engine_parity_with_quantized_kv_and_window(packed_model):
+    cfg, params, _ = packed_model
+    qcfg = dataclasses.replace(cfg, kv_quant="m2xfp", sliding_window=6)
+    packed = prequantize_params(params, qcfg)
+    rng = np.random.default_rng(31)
+    prompts = [list(map(int, rng.integers(0, qcfg.vocab_size, n)))
+               for n in (9, 2, 7)]
+    eng = ServeEngine(packed, qcfg, n_slots=2, max_len=16, prefill_chunk=8)
+    outs = eng.generate(prompts, max_new_tokens=3)
+    for prompt, got in zip(prompts, outs):
+        assert got == _serve_single(packed, qcfg, prompt, 3, max_len=16)
+
+
+def test_prefill_budget_never_starves_decode_or_oldest(packed_model):
+    """With a tiny token budget the engine still finishes everything, and
+    bit-identically: decode slots always advance, the oldest prefilling
+    request always gets at least one token."""
+    cfg, _, packed = packed_model
+    rng = np.random.default_rng(37)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in (12, 12, 12)]
+    ref = ServeEngine(packed, cfg, n_slots=2, max_len=32,
+                      prefill_chunk=1).generate(prompts, max_new_tokens=3)
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32,
+                      prefill_chunk=8, prefill_budget=3)
+    assert eng.generate(prompts, max_new_tokens=3) == ref
+    eng.scheduler.check()
+
+
+def test_steps_to_first_token_4x_for_128_prompt(packed_model):
+    """Acceptance: a 128-token prompt reaches its first sampled token in
+    >= 4x fewer engine steps with chunked prefill, identical tokens."""
+    cfg, _, packed = packed_model
+    rng = np.random.default_rng(41)
+    prompt = list(map(int, rng.integers(0, cfg.vocab_size, 128)))
+    legacy = ServeEngine(packed, cfg, n_slots=2, max_len=160,
+                         prefill_chunk=1)
+    chunked = ServeEngine(packed, cfg, n_slots=2, max_len=160,
+                          prefill_chunk=8)
+    ref = legacy.generate([prompt], max_new_tokens=2)
+    got = chunked.generate([prompt], max_new_tokens=2)
+    assert got == ref
+    ttft_1, ttft_c = legacy.mean_ttft_steps(), chunked.mean_ttft_steps()
+    assert ttft_1 == 128 and ttft_c == 16
+    assert ttft_1 / ttft_c >= 4.0
+
+
+def test_recurrent_families_force_one_token_prefill(packed_model):
+    cfg, _, _ = packed_model
+    scfg = dataclasses.replace(cfg, family="ssm", quant="none",
+                               ssm_state=16, ssm_head_dim=16)
+    params = init_params(KEY, scfg)
+    eng = ServeEngine(params, scfg, n_slots=1, max_len=32, prefill_chunk=8)
+    assert eng.chunk == 1
+    out = eng.generate([[1, 2, 3, 4]], max_new_tokens=2)
+    assert len(out[0]) == 2
+
+
+# ---------------------------------------------------------------------------
 # Scheduler invariants
 # ---------------------------------------------------------------------------
 
@@ -217,13 +385,115 @@ def test_run_returns_only_this_drain(packed_model):
     assert [r.rid for r in second] == [r2.rid]
 
 
-def test_stats_token_accounting(packed_model):
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_stats_token_accounting(packed_model, chunk):
+    """Per request: prompt feeds len(prompt)-1 prefill tokens (the last
+    prompt token's step samples) and every output token counts as
+    generated — independent of how prefill is chunked."""
     cfg, _, packed = packed_model
-    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32)
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32,
+                      prefill_chunk=chunk)
     prompts = [[1, 2, 3, 4], [5, 6]]
     eng.generate(prompts, max_new_tokens=3)
     s = eng.stats
     assert s.generated_tokens == 2 * 3
-    # every active slot-step processed exactly one token
-    assert s.prefill_tokens + s.generated_tokens == s.slot_steps
+    assert s.prefill_tokens == sum(len(p) - 1 for p in prompts)
+    assert s.steps == s.prefill_steps + s.decode_steps
+    # a slot-step consumes >= 1 token; with chunk=1, exactly one
+    assert s.slot_steps <= s.prefill_tokens + s.generated_tokens
+    if chunk == 1:
+        assert s.prefill_tokens + s.generated_tokens == s.slot_steps
+        assert s.prefill_steps == 0
+    else:
+        assert s.prefill_steps > 0
     assert 0 < s.occupancy <= 1
+
+
+# ---------------------------------------------------------------------------
+# Fuzz: randomized traffic against the scheduler and the engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", range(8))
+def test_scheduler_fuzz_invariants(seed):
+    """Randomized submit/plan/consume/evict traffic. After every operation:
+    slots partition free/active, no slot serves two requests, consumed
+    never overruns the prompt, occupancy <= 1; at drain every request
+    finished with a full output."""
+    rng = np.random.default_rng(seed)
+    sched = SlotScheduler(int(rng.integers(1, 5)))
+    submitted, step = [], 0
+    n_to_submit = int(rng.integers(5, 25))
+    while len(submitted) < n_to_submit or sched.has_work:
+        step += 1
+        if len(submitted) < n_to_submit and rng.random() < 0.5:
+            n_new = int(rng.integers(1, 4))
+            for _ in range(n_new):
+                req = sched.submit(
+                    list(map(int, rng.integers(0, 97,
+                                               int(rng.integers(1, 12))))),
+                    max_new_tokens=int(rng.integers(1, 5)))
+                submitted.append(req)
+            sched.check()
+        sched.admit(step)
+        sched.check()
+        assert sched.occupancy <= 1
+        rids = [r.rid for r in sched.active.values()]
+        assert len(rids) == len(set(rids)), "slot serves two requests"
+        if not sched.active:
+            continue
+        budget = (None if rng.random() < 0.5
+                  else int(rng.integers(1, 9)))
+        plan = sched.plan_chunks(int(rng.integers(1, 9)), budget)
+        assert set(plan) == set(sched.active)
+        # decode slots always progress; so does the oldest prefilling one
+        prefilling = sorted(
+            (r for r in sched.active.values() if r.phase == "prefill"),
+            key=lambda r: (r.admit_step, r.rid))
+        for slot, req in sched.active.items():
+            if req.phase == "decode":
+                assert plan[slot] == 1
+            else:
+                assert 0 <= plan[slot] <= len(req.prompt) - req.consumed
+        if prefilling:
+            assert plan[prefilling[0].slot] >= 1
+        # consume the plan the way the engine does
+        for slot, req in list(sched.active.items()):
+            c = plan[slot]
+            if c == 0:
+                continue
+            if req.phase == "prefill":
+                req.consumed += c
+                if req.consumed < len(req.prompt):
+                    continue
+            req.output.append(int(rng.integers(0, 97)))
+            if req.done:
+                sched.evict(slot, step)
+        sched.check()
+    assert len(sched.finished) == len(submitted)
+    for req in submitted:
+        assert req.state == "finished"
+        assert req.consumed == len(req.prompt)
+        assert len(req.output) == req.max_new_tokens
+
+
+@pytest.mark.fuzz
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_fuzz_matches_single_request(packed_model, seed):
+    """Randomized prompt lengths / chunk / budget / slot churn: every
+    request's tokens equal serving it alone, and reused slots leak no KV
+    state into later requests."""
+    cfg, _, packed = packed_model
+    rng = np.random.default_rng(100 + seed)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(1, 14)))))
+               for _ in range(6)]
+    eng = ServeEngine(
+        packed, cfg, n_slots=int(rng.integers(1, 4)), max_len=32,
+        prefill_chunk=int(rng.integers(2, 9)),
+        prefill_budget=(None if rng.random() < 0.5
+                        else int(rng.integers(1, 10))))
+    outs = eng.generate(prompts, max_new_tokens=3)
+    eng.scheduler.check()
+    for prompt, got in zip(prompts, outs):
+        assert got == _serve_single(packed, cfg, prompt, 3)
