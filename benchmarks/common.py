@@ -52,6 +52,22 @@ def time_call(fn, *args, iters: int = 10, warmup: int = 2) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.2f},{derived}")
+    from repro import obs
+    if obs.enabled():
+        # mirror into the registry so benchmark runs leave a
+        # machine-readable metrics.jsonl next to the CSV stdout
+        obs.gauge("repro_bench_us_per_call",
+                  "benchmark wall time per call (microseconds)",
+                  ).set(us_per_call, bench=name)
+        for kv in derived.split(";"):
+            k, _, v = kv.partition("=")
+            try:
+                val = float(v)
+            except ValueError:
+                continue                     # non-numeric derived field
+            obs.gauge("repro_bench_derived",
+                      "derived benchmark quantities from csv_row",
+                      ).set(val, bench=name, field=k)
 
 
 # ---------------------------------------------------------------------------

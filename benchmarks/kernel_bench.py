@@ -40,8 +40,20 @@ def run() -> dict:
             f";bits_per_elem={8 * packed_bytes / w.size:.2f}")
     csv_row("kernel_online_quantize", t_quant,
             f"tokens={m};features={k};bits_out=4.5")
-    return {"t_base": t_base, "t_serve": t_serve, "t_quant": t_quant,
-            "ratio": ratio}
+    out = {"t_base": t_base, "t_serve": t_serve, "t_quant": t_quant,
+           "ratio": ratio}
+    from repro import obs
+    if obs.enabled():
+        g = obs.gauge("repro_kernel_bench_us",
+                      "kernel microbenchmark wall time (microseconds)")
+        for kind, t in (("bf16_matmul", t_base),
+                        ("dequant_matmul", t_serve),
+                        ("online_quantize", t_quant)):
+            g.set(t, kernel=kind, m=m, k=k, n=n)
+        obs.gauge("repro_kernel_bench_hbm_ratio",
+                  "bf16 vs packed weight-stream residency ratio").set(ratio)
+        obs.autodump()             # metrics.jsonl -> REPRO_OBS_DIR if set
+    return out
 
 
 if __name__ == "__main__":

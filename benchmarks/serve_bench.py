@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +67,16 @@ def main():
                     help="max prompt tokens per slot per step")
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="cap on total prefill tokens per step")
+    ap.add_argument("--obs-out", default=None, metavar="DIR",
+                    help="enable REPRO_OBS and drop metrics.jsonl / "
+                         "trace.json / serve_stats.json under DIR "
+                         "(docs/observability.md)")
     args = ap.parse_args()
+
+    if args.obs_out:
+        os.environ.setdefault("REPRO_OBS", "1")
+        os.environ["REPRO_OBS_DIR"] = args.obs_out
+    from repro import obs
 
     cfg = build_cfg(args)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -98,16 +109,16 @@ def main():
                       prefill_chunk=args.prefill_chunk,
                       prefill_budget=args.prefill_budget)
     outs = eng.generate(prompts, max_new_tokens=args.tokens)
-    s = eng.stats
+    sd = eng.stats.to_dict()       # fields + derived rates in one snapshot
     print(f"served {args.requests} requests on {args.slots} slots: "
-          f"{s.generated_tokens} new + {s.prefill_tokens} prompt tokens in "
-          f"{s.steps} steps, {s.wall_s:.2f}s "
-          f"({s.tokens_per_sec:.1f} tok/s measured on "
-          f"{jax.default_backend()}, occupancy {s.occupancy:.2f})")
-    print(f"phases: {s.prefill_steps} prefill steps "
-          f"({s.prefill_tokens_per_sec:.1f} prompt tok/s), "
-          f"{s.decode_steps} decode steps "
-          f"({s.decode_tokens_per_sec:.1f} new tok/s); "
+          f"{sd['generated_tokens']} new + {sd['prefill_tokens']} prompt "
+          f"tokens in {sd['steps']} steps, {sd['wall_s']:.2f}s "
+          f"({sd['tokens_per_sec']:.1f} tok/s measured on "
+          f"{jax.default_backend()}, occupancy {sd['occupancy']:.2f})")
+    print(f"phases: {sd['prefill_steps']} prefill steps "
+          f"({sd['prefill_tokens_per_sec']:.1f} prompt tok/s), "
+          f"{sd['decode_steps']} decode steps "
+          f"({sd['decode_tokens_per_sec']:.1f} new tok/s); "
           f"mean TTFT {eng.mean_ttft_steps():.1f} steps "
           f"(chunk={eng.chunk}, budget={args.prefill_budget})")
     assert all(len(o) == args.tokens for o in outs)
@@ -139,6 +150,28 @@ def main():
           f"{tok_p:,.0f} tok/s packed vs {tok_d:,.0f} tok/s bf16 "
           f"-> {tok_p / tok_d:.2f}x modeled speedup "
           f"(bound: {t_p.dominant})")
+
+    if args.obs_out:
+        os.makedirs(args.obs_out, exist_ok=True)
+        snap = {
+            "bench": "serve_bench",
+            "backend": jax.default_backend(),
+            "config": {k: getattr(args, k) for k in
+                       ("slots", "requests", "prompt_len", "tokens",
+                        "d_model", "layers", "max_len", "kv_quant",
+                        "prefill_chunk", "prefill_budget")},
+            "stats": sd,
+            "ttft_steps": {"chunked": ttft_c, "one_token": ttft_1},
+            "bytes": {"weights_bf16": dense_bytes,
+                      "weights_packed": packed_bytes,
+                      "per_token_packed": bpt_p, "per_token_bf16": bpt_d},
+            "roofline_tok_s": {"packed": tok_p, "bf16": tok_d},
+        }
+        path = os.path.join(args.obs_out, "serve_stats.json")
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=2)
+        obs.dump(args.obs_out)     # metrics.jsonl + trace.json alongside
+        print(f"obs: wrote {path} (+ metrics.jsonl, trace.json)")
     return 0
 
 

@@ -17,8 +17,10 @@ from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
 from repro.distributed.straggler import PreemptionGuard, StragglerMonitor
 from repro.models.config import ModelConfig
 from repro.models.model import loss_fn
+from repro import obs
 from repro.train.optimizer import AdamWConfig
-from repro.train.trainer import make_train_state, make_train_step
+from repro.train.trainer import (make_train_state, make_train_step,
+                                 publish_train_metrics)
 
 
 def main():
@@ -67,6 +69,7 @@ def main():
             state, metrics = step_fn(state, batch)
             monitor.step_end(i)
             if i % 20 == 0 or i == args.steps - 1:
+                publish_train_metrics(metrics, step=i)   # REPRO_OBS-gated
                 print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
                       f"gnorm {float(metrics['grad_norm']):.3f}  "
                       f"lr {float(metrics['lr']):.2e}")
@@ -81,6 +84,7 @@ def main():
         mgr.wait()
     finally:
         pf.close()
+    obs.autodump()        # metrics.jsonl + trace.json -> REPRO_OBS_DIR
     print("done.")
 
 

@@ -1,0 +1,166 @@
+"""Render a text summary from an observability dump (docs/observability.md).
+
+Reads the ``metrics.jsonl`` + ``trace.json`` files that ``repro.obs.dump``
+(or ``REPRO_OBS_DIR`` autodump) leaves behind and prints:
+
+  * counters and gauges, grouped by metric name with their labels
+  * histograms: count / mean / estimated p50, p90, p99 from the cumulative
+    bucket counts (linear interpolation inside the winning bucket)
+  * the top-N quantization clip-rate layers — the first thing to look at
+    when packed accuracy drifts
+  * a span summary from the Chrome trace (count + total/mean wall time per
+    span name)
+
+JSONL dumps are append-only, so a directory can hold several snapshots of
+the same metric; the *last* record per (name, labels) wins.
+
+    PYTHONPATH=src python scripts/obs_report.py /tmp/obs
+    PYTHONPATH=src python scripts/obs_report.py --metrics m.jsonl --top 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_metrics(path: str) -> dict:
+    """Last record per (name, sorted labels) from an append-only JSONL."""
+    out = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            key = (rec["name"], tuple(sorted(rec["labels"].items())))
+            out[key] = rec
+    return out
+
+
+def fmt_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f"{k}={v}" for k, v in sorted(labels.items())) + "}"
+
+
+def quantile_from_buckets(buckets: dict, q: float):
+    """Estimate the q-quantile from cumulative {le: count} buckets by
+    linear interpolation inside the first bucket whose cumulative count
+    reaches q*total. Returns None on an empty histogram; the +Inf bucket
+    clamps to the largest finite bound."""
+    total = buckets.get("+Inf", 0)
+    if total <= 0:
+        return None
+    target = q * total
+    prev_le, prev_n = 0.0, 0
+    finite = [(float(le), n) for le, n in buckets.items() if le != "+Inf"]
+    for le, n in sorted(finite):
+        if n >= target:
+            span = n - prev_n
+            frac = 0.0 if span <= 0 else (target - prev_n) / span
+            return prev_le + frac * (le - prev_le)
+        prev_le, prev_n = le, n
+    return finite[-1][0] if finite else None
+
+
+def report_metrics(recs: dict, top: int) -> list[str]:
+    lines = []
+    by_kind = {"counter": [], "gauge": [], "histogram": []}
+    for (name, _), rec in sorted(recs.items()):
+        by_kind.setdefault(rec["type"], []).append(rec)
+
+    for kind in ("counter", "gauge"):
+        rows = by_kind[kind]
+        if not rows:
+            continue
+        lines.append(f"== {kind}s ({len(rows)} series) ==")
+        for rec in rows:
+            lines.append(f"  {rec['name']}{fmt_labels(rec['labels'])} "
+                         f"= {rec['value']:g}")
+        lines.append("")
+
+    hists = by_kind["histogram"]
+    if hists:
+        lines.append(f"== histograms ({len(hists)} series) ==")
+        for rec in hists:
+            n = rec["count"]
+            mean = rec["sum"] / n if n else float("nan")
+            qs = [quantile_from_buckets(rec["buckets"], q)
+                  for q in (0.5, 0.9, 0.99)]
+            qtxt = " ".join(
+                f"p{int(q * 100)}={v:.4g}" if v is not None else
+                f"p{int(q * 100)}=?"
+                for q, v in zip((0.5, 0.9, 0.99), qs))
+            lines.append(f"  {rec['name']}{fmt_labels(rec['labels'])}: "
+                         f"count={n} mean={mean:.4g} {qtxt}")
+        lines.append("")
+
+    clip = [r for (name, _), r in sorted(recs.items())
+            if name == "repro_quant_clip_rate"
+            and r["labels"].get("kind") == "weight"]
+    if clip:
+        clip.sort(key=lambda r: -r["value"])
+        lines.append(f"== top clip-rate layers (of {len(clip)}) ==")
+        for rec in clip[:top]:
+            lines.append(f"  {rec['labels'].get('layer', '?'):40s} "
+                         f"clip_rate={rec['value']:.3e}")
+        lines.append("")
+    return lines
+
+
+def report_trace(path: str) -> list[str]:
+    with open(path) as f:
+        trace = json.load(f)
+    spans = [e for e in trace.get("traceEvents", []) if e.get("ph") == "X"]
+    if not spans:
+        return ["== trace: no complete spans =="]
+    agg = {}
+    for e in spans:
+        a = agg.setdefault(e["name"], [0, 0.0])
+        a[0] += 1
+        a[1] += e.get("dur", 0.0)
+    lines = [f"== trace spans ({len(spans)} events, "
+             f"{len(agg)} names) =="]
+    for name, (n, dur) in sorted(agg.items(), key=lambda kv: -kv[1][1]):
+        lines.append(f"  {name:28s} n={n:<5d} total={dur / 1e3:9.2f}ms "
+                     f"mean={dur / n / 1e3:8.3f}ms")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("directory", nargs="?", default=None,
+                    help="dump directory holding metrics.jsonl / trace.json "
+                         "(default: $REPRO_OBS_DIR)")
+    ap.add_argument("--metrics", default=None, help="explicit metrics.jsonl")
+    ap.add_argument("--trace", default=None, help="explicit trace.json")
+    ap.add_argument("--top", type=int, default=10,
+                    help="clip-rate layers to show")
+    args = ap.parse_args(argv)
+
+    d = args.directory or os.environ.get("REPRO_OBS_DIR")
+    metrics = args.metrics or (d and os.path.join(d, "metrics.jsonl"))
+    trace = args.trace or (d and os.path.join(d, "trace.json"))
+    if not metrics and not trace:
+        ap.error("give a dump directory, --metrics, or --trace "
+                 "(or set REPRO_OBS_DIR)")
+
+    lines = []
+    if metrics and os.path.exists(metrics):
+        recs = load_metrics(metrics)
+        lines.append(f"metrics: {metrics} ({len(recs)} series)")
+        lines += report_metrics(recs, args.top)
+    elif metrics:
+        lines.append(f"metrics: {metrics} (missing)")
+    if trace and os.path.exists(trace):
+        lines += report_trace(trace)
+    elif trace:
+        lines.append(f"trace: {trace} (missing)")
+    print("\n".join(lines))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

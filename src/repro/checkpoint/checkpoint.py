@@ -50,6 +50,12 @@ def _flatten(state):
 def save_state(ckpt_dir: str, step: int, state, extra: Optional[dict] = None,
                keep: int = 3) -> str:
     """Atomic checkpoint write. Returns the final directory path."""
+    from repro.obs import span
+    with span("checkpoint.save", cat="ckpt", dir=ckpt_dir, step=step):
+        return _save_state(ckpt_dir, step, state, extra, keep)
+
+
+def _save_state(ckpt_dir, step, state, extra, keep) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -114,6 +120,13 @@ def restore_state(ckpt_dir: str, template, step: Optional[int] = None,
     eval_shape). ``shardings``: optional matching tree of NamedShardings —
     arrays are placed (and re-sharded if the mesh changed) on load.
     Returns (state, manifest_extra)."""
+    from repro.obs import span
+    with span("checkpoint.restore", cat="ckpt", dir=ckpt_dir,
+              step=-1 if step is None else step):
+        return _restore_state(ckpt_dir, template, step, shardings)
+
+
+def _restore_state(ckpt_dir, template, step=None, shardings=None):
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")

@@ -331,6 +331,8 @@ def encode_act_m2xfp(
     e = shared_scale_exponent(amax, rule)
     s = exp2int(e)
     q4, onehot, _, meta, _ = elem_em_encode_parts(xg, s, subgroup)
+    from repro.obs.quant_health import probe_scaled
+    probe_scaled("encode_act", xg / s, e, meta)     # REPRO_OBS health pillar
     # sign of the original value (keeps sign of values that round to FP4 zero,
     # matching the sign-magnitude hardware encoding)
     codes = _sign_mag_code(q4, jnp.where(xg < 0, -1.0, 1.0))
@@ -384,6 +386,8 @@ def encode_weight_m2xfp(
     s_final = (1.0 + k_sel.astype(jnp.float32) / 4.0) * \
         exp2int(e_stored)[..., None]
     wsub = wg.reshape(*wg.shape[:-1], group // subgroup, subgroup)
+    from repro.obs.quant_health import probe_scaled
+    probe_scaled("encode_weight", wsub / s_final[..., None], e_stored, k_sel)
     q = round_to_grid(wsub / s_final[..., None], FP4_E2M1)
     codes = _sign_mag_code(q, jnp.where(wsub < 0, -1.0, 1.0))
     packed_codes = pack_nibbles(codes.reshape(*w.shape[:-1], -1))

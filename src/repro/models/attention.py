@@ -36,9 +36,25 @@ from .quant import init_linear, quantized_matmul
 NEG_INF = -2.0e38
 
 
-def _env_int(name, default):
+def _env_int(name, default, minimum=1):
+    """Positive-int env override. A non-integer or non-positive value is a
+    hard error — a zero or negative chunk/tile would silently produce
+    broken tiling (division by zero, empty scans) far from the setting."""
     import os
-    return int(os.environ.get(name, default))
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        v = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name}={raw!r}: not an integer (unset it for the default "
+            f"{default})") from None
+    if v < minimum:
+        raise ValueError(
+            f"{name}={raw!r}: must be >= {minimum}; unset it for the "
+            f"default {default}")
+    return v
 
 
 # perf levers (§Perf): larger chunks -> fewer scan iterations -> less

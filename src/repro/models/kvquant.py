@@ -34,7 +34,14 @@ __all__ = ["kv_encode", "kv_decode", "kv_cache_spec", "kv_page_write"]
 
 def kv_encode(x: jax.Array) -> dict:
     """(..., hd) -> {codes (..., hd/2) u8, scales (..., hd/32) u8,
-    meta (..., hd/32) u8}. Sg-EM fixed-scale (online-cheap)."""
+    meta (..., hd/32) u8}. Sg-EM fixed-scale (online-cheap).
+
+    With the ``health`` pillar of REPRO_OBS enabled at trace time, clip /
+    scale-saturation / meta-mode reductions over the encoded tokens are
+    traced in and drained host-side asynchronously (repro.obs.quant_health
+    — the encoder's own intermediates are reused, so the probe adds only
+    small reductions)."""
+    from repro.obs.quant_health import probe_scaled
     hd = x.shape[-1]
     xg = group_reshape(x.astype(jnp.float32), GROUP)
     amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
@@ -44,6 +51,7 @@ def kv_encode(x: jax.Array) -> dict:
         xg, s, SUBGROUP, bits=2, adaptive=False, return_codes=True)
     s_final = (1.0 + k_sel.astype(jnp.float32) / 4.0) * s
     xsub = xg.reshape(*xg.shape[:-1], N_SUB, SUBGROUP)
+    probe_scaled("kv_encode", xsub / s_final[..., None], e, k_sel)
     q = round_to_grid(xsub / s_final[..., None], FP4_E2M1)
     mag = fp4_value_to_code(jnp.abs(q))
     codes = jnp.where(xsub < 0, mag | 8, mag).reshape(*x.shape[:-1], hd)

@@ -213,22 +213,42 @@ def _serve_matmul(x: jax.Array, w: "PackedWeight", dims) -> jax.Array:
     then contract against the packed Sg-EM streams. On TPU the streams feed
     the fused dequant-GEMM Pallas kernel (weights never rematerialize in
     bf16 in HBM); on CPU the XLA mirror decodes inline (numerically
-    identical — every decoded value is exact in bf16)."""
+    identical — every decoded value is exact in bf16).
+
+    Observability (REPRO_OBS, checked at TRACE time so the disabled graph
+    is byte-identical): the ``health`` pillar traces clip/scale-saturation/
+    meta-mode reductions over the online-quantized activations, drained
+    host-side via ``jax.debug.callback`` (asynchronous — no extra syncs on
+    the launch); the ``metrics`` pillar counts which backend each GEMM
+    call site dispatched to."""
+    from repro import obs
     from .numerics import dot_f32acc
+    obs.quant_health.probe_act(x, site="serve_gemm")
     xq = fake_quant_act(x.astype(jnp.float32), "m2xfp").astype(jnp.bfloat16)
     k = w.shape[0]
     n = 1
     for d in w.shape[1:]:
         n *= d
-    if serve_matmul_backend() == "pallas" and _pallas_tiles(k, n):
+    use_pallas = serve_matmul_backend() == "pallas" and _pallas_tiles(k, n)
+    if obs.enabled():
+        obs.counter(
+            "repro_serve_gemm_traces_total",
+            "serve GEMM call sites traced, by dispatched backend").inc(
+            backend="pallas" if use_pallas else "xla", k=k, n=n)
+    if use_pallas:
         from repro.kernels import m2xfp_matmul
-        streams = {"codes": w.codes.reshape(k // 2, n),
-                   "scales": w.scales.reshape(k // GROUP, n),
-                   "meta": w.meta.reshape(k // GROUP, n)}
-        out = m2xfp_matmul(xq.reshape(-1, k), streams)
+        with obs.span("trace.serve_matmul", cat="trace", backend="pallas",
+                      k=k, n=n):
+            streams = {"codes": w.codes.reshape(k // 2, n),
+                       "scales": w.scales.reshape(k // GROUP, n),
+                       "meta": w.meta.reshape(k // GROUP, n)}
+            out = m2xfp_matmul(xq.reshape(-1, k), streams)
         return out.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
-    wd = decode_serving_weight(w)
-    return dot_f32acc(xq, wd, dims).astype(x.dtype)
+    with obs.span("trace.serve_matmul", cat="trace", backend="xla",
+                  k=k, n=n):
+        wd = decode_serving_weight(w)
+        out = dot_f32acc(xq, wd, dims).astype(x.dtype)
+    return out
 
 
 def quantized_matmul(x: jax.Array, w, quant: str, fmt: str = "m2xfp",

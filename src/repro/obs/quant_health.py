@@ -1,0 +1,238 @@
+"""Quantization-health telemetry (the ``health`` pillar of ``REPRO_OBS``).
+
+What the paper's accuracy claims hinge on is *observable* encoder
+behaviour: how often elements clip against the FP4 grid, how often the
+shared E8M0 scale saturates its representable range, which metadata modes
+the encoders actually use, and whether pack -> decode -> re-pack drifts.
+This module turns those into metrics:
+
+* **In-jit probes** (:func:`probe_act`, :func:`drain_stats`) — tiny
+  reductions traced into the serve-path GEMM / KV-encode graphs, shipped
+  to the host with ``jax.debug.callback`` (asynchronous: the callback
+  fires when the values are ready, nothing on the hot path blocks on it).
+  Probes are gated *at trace time*: with the ``health`` pillar off the
+  traced computation is byte-for-byte the uninstrumented graph.
+
+* **Host-side sweeps** (:func:`weight_tree_health`) — per-layer clip
+  rate, scale-byte saturation, metadata-mode histograms and re-encode
+  drift over a packed parameter tree, computed once (e.g. at serving
+  engine start) and recorded as per-layer gauges.
+
+Metric names are documented in docs/observability.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+from .registry import counter, enabled, gauge
+
+__all__ = [
+    "probe_act", "drain_stats", "weight_tree_health", "act_reencode_drift",
+    "E8M0_BYTE_LOW", "E8M0_BYTE_HIGH",
+]
+
+# Biased E8M0 scale-byte bounds: repro.core.scaling clamps exponents to
+# [-126, 127] -> stored bytes [1, 254]. A group whose scale byte sits at a
+# bound had its exponent clipped — its elements may be misscaled.
+E8M0_BYTE_LOW = 1
+E8M0_BYTE_HIGH = 254
+
+_FP4_MAX = 6.0          # FP4 E2M1 top grid value (|x|/s beyond it clips)
+_FP4_TOP_CODE = 7       # magnitude code of the 6.0 grid point
+
+
+def _site_counters(site: str, n, clipped, groups, sat_lo, sat_hi, meta):
+    """Host-side accumulation of one probe's scalars into the registry."""
+    counter("repro_quant_elems_total",
+            "elements seen by quantization encoders").inc(float(n), site=site)
+    counter("repro_quant_clipped_total",
+            "elements clipped against the FP4 grid").inc(
+        float(clipped), site=site)
+    counter("repro_quant_groups_total",
+            "scale groups seen by quantization encoders").inc(
+        float(groups), site=site)
+    counter("repro_quant_scale_saturated_total",
+            "groups whose E8M0 scale byte hit a [1, 254] bound").inc(
+        float(sat_lo), site=site, bound="low")
+    counter("repro_quant_scale_saturated_total", "").inc(
+        float(sat_hi), site=site, bound="high")
+    mh = np.asarray(meta).reshape(-1)
+    for code in range(mh.shape[0]):
+        counter("repro_quant_meta_total",
+                "metadata-mode occupancy (2-bit code histogram)").inc(
+            float(mh[code]), site=site, code=str(code))
+    elems = counter("repro_quant_elems_total").value(site=site)
+    if elems > 0:
+        gauge("repro_quant_clip_rate",
+              "cumulative clipped / seen element fraction").set(
+            counter("repro_quant_clipped_total").value(site=site) / elems,
+            site=site, kind="online")
+
+
+def drain_stats(site: str, stats: tuple) -> None:
+    """`jax.debug.callback` target: ``stats`` is the scalar tuple built by
+    a probe. Safe to call from any thread (registry is locked)."""
+    _site_counters(site, *stats)
+
+
+def probe_act(x, site: str) -> None:
+    """Trace health reductions for an activation tensor about to be
+    Elem-EM quantized (call INSIDE jit, before/independent of the encode —
+    the probe recomputes the shared scale itself). No-op unless the
+    ``health`` pillar is enabled at trace time."""
+    if not enabled("health"):
+        return
+    import jax
+    import jax.numpy as jnp
+    from repro.core.m2xfp import elem_em_encode_parts
+    from repro.core.packing import group_reshape
+    from repro.core.scaling import shared_scale_exponent
+    from repro.core.dtypes import exp2int
+
+    xg = group_reshape(x.astype(jnp.float32), 32)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    e = shared_scale_exponent(amax, "floor")
+    s = exp2int(e)
+    clipped = jnp.sum(jnp.abs(xg) > _FP4_MAX * s)
+    sat_lo = jnp.sum(e <= E8M0_BYTE_LOW - 127)
+    sat_hi = jnp.sum(e >= E8M0_BYTE_HIGH - 127)
+    _, _, _, meta, _ = elem_em_encode_parts(xg, s, 8)
+    hist = jnp.stack([jnp.sum(meta == c) for c in range(4)])
+    stats = (jnp.asarray(x.size), clipped, jnp.asarray(e.size),
+             sat_lo, sat_hi, hist)
+    jax.debug.callback(partial(drain_stats, site), stats)
+
+
+def probe_scaled(site: str, xs_over_s, e, meta_codes) -> None:
+    """Probe variant for encoders that already hold the scaled values:
+    ``xs_over_s`` = |x| / s per element, ``e`` integer scale exponents,
+    ``meta_codes`` int 0..3 codes (any shape). Call INSIDE jit."""
+    if not enabled("health"):
+        return
+    import jax
+    import jax.numpy as jnp
+    clipped = jnp.sum(jnp.abs(xs_over_s) > _FP4_MAX)
+    sat_lo = jnp.sum(e <= E8M0_BYTE_LOW - 127)
+    sat_hi = jnp.sum(e >= E8M0_BYTE_HIGH - 127)
+    hist = jnp.stack([jnp.sum(meta_codes == c) for c in range(4)])
+    stats = (jnp.asarray(xs_over_s.size), clipped, jnp.asarray(e.size),
+             sat_lo, sat_hi, hist)
+    jax.debug.callback(partial(drain_stats, site), stats)
+
+
+# ---------------------------------------------------------------------------
+# Host-side per-layer sweep over a packed parameter tree
+# ---------------------------------------------------------------------------
+
+def _leaf_paths(tree, is_leaf):
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _stream_stats(codes: np.ndarray, scales: np.ndarray,
+                  meta: np.ndarray) -> dict:
+    """Clip/saturation/meta stats straight from the packed u8 streams."""
+    nibs = np.concatenate([codes & 0xF, codes >> 4], axis=None)
+    mags = nibs & 7
+    n = mags.size
+    hist = np.bincount((np.concatenate(
+        [(meta >> (2 * j)) & 0x3 for j in range(4)], axis=None)), minlength=4)
+    return {
+        "elems": int(n),
+        "clip_rate": float(np.mean(mags == _FP4_TOP_CODE)),
+        "groups": int(scales.size),
+        "sat_low_rate": float(np.mean(scales <= E8M0_BYTE_LOW)),
+        "sat_high_rate": float(np.mean(scales >= E8M0_BYTE_HIGH)),
+        "meta_hist": hist.astype(int).tolist(),
+    }
+
+
+def _layer_drift(pw_cls, codes, scales, meta, shape) -> float:
+    """Relative MSE between a decoded layer and its decode->repack->decode
+    round trip (Sg-EM idempotence; ~0 means the packed checkpoint is a
+    fixed point of the encoder)."""
+    import jax.numpy as jnp
+    from repro.models.quant import decode_serving_weight, pack_serving_weight
+    w1 = decode_serving_weight(pw_cls(codes, scales, meta, shape))
+    w2 = decode_serving_weight(pack_serving_weight(w1.astype(jnp.float32)))
+    num = float(jnp.mean((w1.astype(jnp.float32) -
+                          w2.astype(jnp.float32)) ** 2))
+    den = float(jnp.mean(w1.astype(jnp.float32) ** 2)) + 1e-30
+    return num / den
+
+
+def weight_tree_health(tree, drift: bool = True) -> dict:
+    """Sweep every ``PackedWeight`` leaf of a packed parameter tree and
+    record per-layer gauges:
+
+      repro_quant_clip_rate{layer,kind="weight"}      FP4 top-code occupancy
+      repro_quant_scale_saturation_rate{layer,bound}  E8M0 bytes at 1 / 254
+      repro_quant_meta_fraction{layer,code}           2-bit mode histogram
+      repro_quant_reencode_drift{layer}               decode->repack rel. MSE
+
+    Stacked (per-layer vmapped) leaves are reported per stacked index as
+    ``<path>[i]``. Returns {layer: stats dict} (also useful standalone).
+    Costs one decode (+ one repack when ``drift``) per layer — call it
+    off the hot path (the serving engine does this once at startup)."""
+    from repro.models.quant import PackedWeight
+    report = {}
+    leaves = _leaf_paths(
+        tree, is_leaf=lambda x: isinstance(x, PackedWeight))
+    for key, leaf in leaves:
+        if not isinstance(leaf, PackedWeight):
+            continue
+        codes = np.asarray(leaf.codes)
+        scales = np.asarray(leaf.scales)
+        meta = np.asarray(leaf.meta)
+        stacked = codes.ndim == len(leaf.shape) + 1
+        layers = range(codes.shape[0]) if stacked else (None,)
+        for i in layers:
+            name = key if i is None else f"{key}[{i}]"
+            c, s, m = ((codes[i], scales[i], meta[i]) if stacked
+                       else (codes, scales, meta))
+            st = _stream_stats(c, s, m)
+            if drift:
+                st["reencode_drift"] = _layer_drift(
+                    PackedWeight, leaf.codes[i] if stacked else leaf.codes,
+                    leaf.scales[i] if stacked else leaf.scales,
+                    leaf.meta[i] if stacked else leaf.meta, leaf.shape)
+            report[name] = st
+            gauge("repro_quant_clip_rate",
+                  "per-layer FP4 top-code occupancy of packed weights").set(
+                st["clip_rate"], layer=name, kind="weight")
+            gauge("repro_quant_scale_saturation_rate",
+                  "per-layer fraction of E8M0 scale bytes at a bound").set(
+                st["sat_low_rate"], layer=name, bound="low")
+            gauge("repro_quant_scale_saturation_rate", "").set(
+                st["sat_high_rate"], layer=name, bound="high")
+            total = max(1, sum(st["meta_hist"]))
+            for code, cnt in enumerate(st["meta_hist"]):
+                gauge("repro_quant_meta_fraction",
+                      "per-layer metadata-mode occupancy").set(
+                    cnt / total, layer=name, code=str(code))
+            if drift:
+                gauge("repro_quant_reencode_drift",
+                      "per-layer decode->repack relative MSE").set(
+                    st["reencode_drift"], layer=name)
+    return report
+
+
+def act_reencode_drift(x) -> float:
+    """Relative MSE of one Elem-EM fake-quant round trip applied twice —
+    the activation-side idempotence check (host helper, not a hot-path
+    probe)."""
+    import jax.numpy as jnp
+    from repro.core.m2xfp import quantize_act_m2xfp
+    q1 = quantize_act_m2xfp(jnp.asarray(x, jnp.float32))
+    q2 = quantize_act_m2xfp(q1)
+    num = float(jnp.mean((q1 - q2) ** 2))
+    den = float(jnp.mean(q1 ** 2)) + 1e-30
+    return num / den

@@ -41,10 +41,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import model as _model
 from repro.models.model import decode_step, init_caches
 
 from .scheduler import Request, SlotScheduler
+
+# TTFT is quantized in engine steps; buckets cover 1..256-step prompts
+_TTFT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 __all__ = ["ServeEngine", "ServeStats", "tree_nbytes"]
 
@@ -91,6 +95,19 @@ class ServeStats:
         if not self.steps:
             return 0.0
         return self.slot_steps / (self.steps * self.n_slots)
+
+    def to_dict(self) -> dict:
+        """Every field plus every derived property, as plain floats/ints —
+        what benches and the obs JSONL sink serialize (no poking at
+        dataclass internals)."""
+        out = dataclasses.asdict(self)
+        out.update(
+            tokens_per_sec=self.tokens_per_sec,
+            prefill_tokens_per_sec=self.prefill_tokens_per_sec,
+            decode_tokens_per_sec=self.decode_tokens_per_sec,
+            occupancy=self.occupancy,
+        )
+        return out
 
 
 def _greedy(logits: np.ndarray) -> np.ndarray:
@@ -172,6 +189,13 @@ class ServeEngine:
             donate_argnums=(2,))
         self._reset = jax.jit(_reset_slot, donate_argnums=(0,))
 
+        # quantization-health sweep of the packed weights: per-layer clip
+        # rate / scale saturation / meta modes / re-encode drift gauges,
+        # once at startup (off the decode hot path)
+        if obs.enabled("health"):
+            with obs.span("serve.weight_health", cat="obs"):
+                obs.quant_health.weight_tree_health(params)
+
     # -- request lifecycle -------------------------------------------------
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -198,10 +222,13 @@ class ServeEngine:
         for slot, req in self.scheduler.active.items():
             if req.phase == "prefill":
                 self._tokens[slot, 0] = req.prompt[req.consumed]
-        logits, self.caches = self._step(
-            self.params, {"tokens": jnp.asarray(self._tokens)}, self.caches,
-            jnp.asarray(self._index))
-        return np.asarray(logits[:, -1]).astype(np.float32)
+        with obs.span("serve.kernel.dispatch", kind="decode_step",
+                      slots=self.n_slots):
+            logits, self.caches = self._step(
+                self.params, {"tokens": jnp.asarray(self._tokens)},
+                self.caches, jnp.asarray(self._index))
+            out = np.asarray(logits[:, -1]).astype(np.float32)
+        return out
 
     def _launch_prefill(self, chunks) -> np.ndarray:
         """Mixed chunked launch: prefilling slots consume their planned
@@ -219,29 +246,43 @@ class ServeEngine:
                 toks[slot, :c] = req.prompt[req.consumed:req.consumed + c]
             else:
                 toks[slot, 0] = self._tokens[slot, 0]
-        logits, self.caches = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, self.caches,
-            jnp.asarray(self._index), jnp.asarray(lens))
-        lg = np.asarray(logits).astype(np.float32)        # (B, T, V)
+        with obs.span("serve.kernel.dispatch", kind="prefill_chunk",
+                      slots=self.n_slots, tokens=int(lens.sum())):
+            logits, self.caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+                jnp.asarray(self._index), jnp.asarray(lens))
+            lg = np.asarray(logits).astype(np.float32)    # (B, T, V)
         return lg[np.arange(self.n_slots), np.maximum(lens - 1, 0)]
 
     def step(self) -> int:
         """Admit, plan per-slot chunks, run one batched launch, route
         tokens. Returns the number of requests that finished this step."""
-        self._admit()
+        with obs.span("serve.step", step=self.stats.steps):
+            return self._step_inner()
+
+    def _step_inner(self) -> int:
+        with obs.span("serve.admit"):
+            self._admit()
         if not self.scheduler.active:
             return 0
-        chunks = self.scheduler.plan_chunks(self.chunk, self.prefill_budget)
+        with obs.span("serve.plan"):
+            chunks = self.scheduler.plan_chunks(self.chunk,
+                                                self.prefill_budget)
         decode_only = all(c == 1 for c in chunks.values())
+        phase = "decode" if decode_only else "prefill"
         t0 = time.perf_counter()
-        if decode_only:
-            sampled_from = self._launch_decode(chunks)
-        else:
-            sampled_from = self._launch_prefill(chunks)
+        with obs.span(f"serve.phase.{phase}",
+                      slots=len(self.scheduler.active)):
+            if decode_only:
+                sampled_from = self._launch_decode(chunks)
+            else:
+                sampled_from = self._launch_prefill(chunks)
         dt = time.perf_counter() - t0
-        sampled = self.sample_fn(sampled_from)
+        with obs.span("serve.sample"):
+            sampled = self.sample_fn(sampled_from)
 
         finished = 0
+        first_tokens, new_prefill, new_generated = [], 0, 0
         self.stats.steps += 1
         if decode_only:
             self.stats.decode_steps += 1
@@ -257,8 +298,9 @@ class ServeEngine:
             if req.phase == "prefill":
                 req.consumed += c
                 still_prefilling = req.consumed < len(req.prompt)
-                self.stats.prefill_tokens += c - (0 if still_prefilling
-                                                  else 1)
+                fed = c - (0 if still_prefilling else 1)
+                self.stats.prefill_tokens += fed
+                new_prefill += fed
                 if still_prefilling:
                     self._index[slot] += c
                     continue                   # logits discarded
@@ -267,25 +309,64 @@ class ServeEngine:
                 self.stats.generated_tokens += 1
             else:
                 self.stats.generated_tokens += 1
+            new_generated += 1
             tok = int(sampled[slot])
             req.output.append(tok)
             if req.first_token_step < 0:
                 req.first_token_step = self.stats.steps
+                first_tokens.append(req)
             self._tokens[slot, 0] = tok
             self._index[slot] += c
             if req.done:
                 self.scheduler.evict(slot, self.stats.steps)
+                obs.instant("serve.evict", rid=req.rid)
                 finished += 1
+        if obs.enabled():
+            self._record_step_metrics(phase, dt, first_tokens,
+                                      new_prefill, new_generated, finished)
         return finished
+
+    def _record_step_metrics(self, phase, dt, first_tokens, new_prefill,
+                             new_generated, finished) -> None:
+        obs.histogram("repro_serve_step_latency_seconds",
+                      "wall seconds per engine launch").observe(
+            dt, phase=phase)
+        obs.counter("repro_serve_steps_total",
+                    "engine launches").inc(phase=phase)
+        if new_prefill:
+            obs.counter("repro_serve_tokens_total",
+                        "tokens through the engine").inc(
+                new_prefill, kind="prefill")
+        if new_generated:
+            obs.counter("repro_serve_tokens_total", "").inc(
+                new_generated, kind="generated")
+        if finished:
+            obs.counter("repro_serve_requests_finished_total",
+                        "requests that completed").inc(finished)
+        for req in first_tokens:
+            obs.histogram("repro_serve_ttft_steps",
+                          "engine steps from admission to first token",
+                          buckets=_TTFT_BUCKETS).observe(req.ttft_steps)
+        obs.gauge("repro_serve_queue_depth",
+                  "requests waiting for a slot").set(
+            len(self.scheduler.queue))
+        obs.gauge("repro_serve_active_slots",
+                  "slots holding a running request").set(
+            len(self.scheduler.active))
+        obs.gauge("repro_serve_occupancy",
+                  "mean fraction of slots progressing per step").set(
+            self.stats.occupancy)
 
     def run(self) -> List[Request]:
         """Step until queue and slots drain. Returns the requests that
         finished during *this* drain, in submission order."""
         already_done = len(self.scheduler.finished)
         t0 = time.perf_counter()
-        while self.scheduler.has_work:
-            self.step()
+        with obs.span("serve.run", slots=self.n_slots):
+            while self.scheduler.has_work:
+                self.step()
         self.stats.wall_s += time.perf_counter() - t0
+        obs.autodump()          # metrics.jsonl + trace.json -> REPRO_OBS_DIR
         return sorted(self.scheduler.finished[already_done:],
                       key=lambda r: r.rid)
 

@@ -28,7 +28,33 @@ from .compression import CompressionConfig, compressed_psum, \
 from .optimizer import AdamWConfig, adamw_init, adamw_update, warmup_cosine
 
 __all__ = ["make_train_state", "make_train_step", "cast_for_compute",
-           "train_state_shardings", "batch_sharding"]
+           "train_state_shardings", "batch_sharding",
+           "publish_train_metrics"]
+
+
+def publish_train_metrics(metrics: dict, step: Optional[int] = None) -> None:
+    """Stream a train-step metrics dict (loss / grad_norm / lr / ...)
+    through the obs registry as ``repro_train_<name>`` gauges plus a
+    ``repro_train_steps_total`` counter.
+
+    No-op with REPRO_OBS off. When on, coercing the device scalars to
+    float blocks on the step — call it at your logging cadence, not every
+    step, if that matters (the scalars are tiny; the sync is the cost)."""
+    from repro import obs
+    if not obs.enabled():
+        return
+    for name, value in metrics.items():
+        try:
+            v = float(value)
+        except (TypeError, ValueError):
+            continue                    # non-scalar entry: skip, don't die
+        obs.gauge(f"repro_train_{name}",
+                  f"latest train-step metric {name!r}").set(v)
+    obs.counter("repro_train_steps_total",
+                "train steps streamed through the registry").inc()
+    if step is not None:
+        obs.gauge("repro_train_step", "latest published step index").set(
+            float(step))
 
 
 def cast_for_compute(params):
