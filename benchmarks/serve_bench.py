@@ -1,6 +1,8 @@
-"""Serving benchmark: batched decode on packed M2XFP weight streams.
+"""Serving benchmark: batched decode on packed MX-family weight streams.
 
-Reports, for the continuous-batching engine (repro.serve):
+Reports, for the continuous-batching engine (repro.serve) and every codec
+named by ``--fmt`` (any packable ``repro.core.codecs`` entry — m2xfp,
+mxfp4, nvfp4, ...), all on the SAME traffic trace:
   * measured tokens/sec of the CPU dry run (XLA mirror of the PE decode),
     split into prefill and decode phases, plus mean time-to-first-token in
     engine steps
@@ -14,6 +16,8 @@ Reports, for the continuous-batching engine (repro.serve):
     decode), reproduced from the byte diet alone.
 
     PYTHONPATH=src python benchmarks/serve_bench.py --tokens 16
+    PYTHONPATH=src python benchmarks/serve_bench.py \
+        --fmt m2xfp mxfp4 nvfp4      # per-format tok/s on one trace
 """
 from __future__ import annotations
 
@@ -23,21 +27,21 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.roofline import HBM_BW, roofline
+from repro.core.codecs import get_codec, packed_codecs
 from repro.models.config import ModelConfig
 from repro.models.model import init_params
 from repro.serve import ServeEngine, prequantize_params, tree_nbytes
 
 
-def build_cfg(args) -> ModelConfig:
+def build_cfg(args, fmt: str) -> ModelConfig:
     return ModelConfig(
         name="serve-bench", family="dense", n_layers=args.layers,
         d_model=args.d_model, n_heads=args.d_model // 32,
         n_kv_heads=args.d_model // 64, d_ff=3 * args.d_model,
-        vocab_size=4096, remat=False, quant="serve",
+        vocab_size=4096, remat=False, quant="serve", quant_format=fmt,
         kv_quant="m2xfp" if args.kv_quant else "none")
 
 
@@ -52,8 +56,102 @@ def decode_roofline(cfg, weight_bytes: int, kv_bytes: int, batch: int):
     return terms, tok_s, step_bytes / batch
 
 
+def bench_format(fmt: str, args, params, prompts) -> dict:
+    """Pack + serve one codec on the shared traffic trace; returns the
+    per-format summary row."""
+    cfg = build_cfg(args, fmt)
+    packed = prequantize_params(params, cfg)
+
+    dense_bytes = tree_nbytes(params)
+    packed_bytes = tree_nbytes(packed)
+    from repro.models.quant import PackedWeight
+    gemm_packed = gemm_dense = 0
+    for node in jax.tree.leaves(
+            packed, is_leaf=lambda x: isinstance(x, PackedWeight)):
+        if isinstance(node, PackedWeight):
+            gemm_packed += tree_nbytes(node)
+            # 2 elements per code byte; node.shape omits any stacked
+            # per-layer leading dims, so count elements from the stream
+            gemm_dense += 2 * (2 * node.codes.size)
+    print(f"[{fmt}] weights: {dense_bytes / 2**20:.1f} MiB bf16 -> "
+          f"{packed_bytes / 2**20:.1f} MiB packed; GEMM streams "
+          f"{gemm_dense / 2**20:.1f} -> {gemm_packed / 2**20:.1f} MiB "
+          f"({gemm_dense / gemm_packed:.2f}x, "
+          f"{8 * gemm_packed / (gemm_dense / 2):.2f} bits/elem)")
+
+    # -- measured: continuous-batching decode on this host ------------------
+    eng = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len,
+                      prefill_chunk=args.prefill_chunk,
+                      prefill_budget=args.prefill_budget)
+    outs = eng.generate(prompts, max_new_tokens=args.tokens)
+    sd = eng.stats.to_dict()       # fields + derived rates in one snapshot
+    print(f"[{fmt}] served {args.requests} requests on {args.slots} slots: "
+          f"{sd['generated_tokens']} new + {sd['prefill_tokens']} prompt "
+          f"tokens in {sd['steps']} steps, {sd['wall_s']:.2f}s "
+          f"({sd['tokens_per_sec']:.1f} tok/s measured on "
+          f"{jax.default_backend()}, occupancy {sd['occupancy']:.2f})")
+    print(f"[{fmt}] phases: {sd['prefill_steps']} prefill steps "
+          f"({sd['prefill_tokens_per_sec']:.1f} prompt tok/s), "
+          f"{sd['decode_steps']} decode steps "
+          f"({sd['decode_tokens_per_sec']:.1f} new tok/s); "
+          f"mean TTFT {eng.mean_ttft_steps():.1f} steps "
+          f"(chunk={eng.chunk}, budget={args.prefill_budget})")
+    assert all(len(o) == args.tokens for o in outs)
+
+    # -- chunked prefill vs one-token path: steps to first token ------------
+    one = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len,
+                      prefill_chunk=1)
+    outs_one = one.generate(prompts, max_new_tokens=args.tokens)
+    # codecs with a per-tensor activation scale (nvfp4) quantize each
+    # launch's tokens against a shared amax, so chunked and one-token
+    # prefill legitimately sample different tokens — parity is a property
+    # of batch-invariant activation codecs only
+    if get_codec(fmt).act_batch_invariant:
+        assert outs_one == outs, "chunked prefill changed sampled tokens"
+        parity = "identical tokens"
+    else:
+        parity = "per-tensor act scale: token parity not defined"
+    ttft_c, ttft_1 = eng.mean_ttft_steps(), one.mean_ttft_steps()
+    print(f"[{fmt}] steps-to-first-token: {ttft_1:.1f} one-token -> "
+          f"{ttft_c:.1f} chunked ({ttft_1 / max(ttft_c, 1e-9):.1f}x fewer), "
+          f"{parity}")
+
+    # -- modeled: HBM bytes/token + v5e roofline bound ----------------------
+    kv_packed = eng.kv_bytes()
+    bf16_cfg = dataclasses.replace(cfg, quant="none", kv_quant="none")
+    bf16_eng = ServeEngine(params, bf16_cfg, n_slots=args.slots,
+                           max_len=args.max_len)
+    kv_bf16 = bf16_eng.kv_bytes()
+
+    t_p, tok_p, bpt_p = decode_roofline(cfg, packed_bytes, kv_packed,
+                                        args.slots)
+    t_d, tok_d, bpt_d = decode_roofline(cfg, dense_bytes, kv_bf16,
+                                        args.slots)
+    print(f"[{fmt}] HBM bytes/token: {bpt_p / 2**20:.2f} MiB packed vs "
+          f"{bpt_d / 2**20:.2f} MiB bf16")
+    print(f"[{fmt}] v5e roofline ({HBM_BW / 1e9:.0f} GB/s HBM): "
+          f"{tok_p:,.0f} tok/s packed vs {tok_d:,.0f} tok/s bf16 "
+          f"-> {tok_p / tok_d:.2f}x modeled speedup "
+          f"(bound: {t_p.dominant})")
+
+    return {
+        "fmt": fmt,
+        "stats": sd,
+        "ttft_steps": {"chunked": ttft_c, "one_token": ttft_1},
+        "bytes": {"weights_bf16": dense_bytes,
+                  "weights_packed": packed_bytes,
+                  "gemm_bits_per_elem": 8 * gemm_packed / (gemm_dense / 2),
+                  "per_token_packed": bpt_p, "per_token_bf16": bpt_d},
+        "roofline_tok_s": {"packed": tok_p, "bf16": tok_d},
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--fmt", nargs="+", default=["m2xfp"],
+                    choices=list(packed_codecs()), metavar="CODEC",
+                    help="packed codec(s) to serve — every format runs the "
+                         f"same traffic trace ({', '.join(packed_codecs())})")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -78,78 +176,22 @@ def main():
         os.environ["REPRO_OBS_DIR"] = args.obs_out
     from repro import obs
 
-    cfg = build_cfg(args)
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    packed = prequantize_params(params, cfg)
-
-    dense_bytes = tree_nbytes(params)
-    packed_bytes = tree_nbytes(packed)
-    from repro.models.quant import PackedWeight
-    gemm_packed = gemm_dense = 0
-    for node in jax.tree.leaves(
-            packed, is_leaf=lambda x: isinstance(x, PackedWeight)):
-        if isinstance(node, PackedWeight):
-            gemm_packed += tree_nbytes(node)
-            # 2 elements per code byte; node.shape omits any stacked
-            # per-layer leading dims, so count elements from the stream
-            gemm_dense += 2 * (2 * node.codes.size)
-    print(f"weights: {dense_bytes / 2**20:.1f} MiB bf16 -> "
-          f"{packed_bytes / 2**20:.1f} MiB packed; GEMM streams "
-          f"{gemm_dense / 2**20:.1f} -> {gemm_packed / 2**20:.1f} MiB "
-          f"({gemm_dense / gemm_packed:.2f}x, "
-          f"{8 * gemm_packed / (gemm_dense / 2):.2f} bits/elem)")
-
-    # -- measured: continuous-batching decode on this host ------------------
+    # one traffic trace, shared by every format (and by both prefill modes)
     rng = np.random.default_rng(5)
     lens = rng.integers(args.prompt_len // 2, args.prompt_len + 1,
                         args.requests)
-    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
-               for n in lens]
-    eng = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len,
-                      prefill_chunk=args.prefill_chunk,
-                      prefill_budget=args.prefill_budget)
-    outs = eng.generate(prompts, max_new_tokens=args.tokens)
-    sd = eng.stats.to_dict()       # fields + derived rates in one snapshot
-    print(f"served {args.requests} requests on {args.slots} slots: "
-          f"{sd['generated_tokens']} new + {sd['prefill_tokens']} prompt "
-          f"tokens in {sd['steps']} steps, {sd['wall_s']:.2f}s "
-          f"({sd['tokens_per_sec']:.1f} tok/s measured on "
-          f"{jax.default_backend()}, occupancy {sd['occupancy']:.2f})")
-    print(f"phases: {sd['prefill_steps']} prefill steps "
-          f"({sd['prefill_tokens_per_sec']:.1f} prompt tok/s), "
-          f"{sd['decode_steps']} decode steps "
-          f"({sd['decode_tokens_per_sec']:.1f} new tok/s); "
-          f"mean TTFT {eng.mean_ttft_steps():.1f} steps "
-          f"(chunk={eng.chunk}, budget={args.prefill_budget})")
-    assert all(len(o) == args.tokens for o in outs)
+    prompts = [list(map(int, rng.integers(0, 4096, n))) for n in lens]
+    params = init_params(jax.random.PRNGKey(0), build_cfg(args, "m2xfp"))
 
-    # -- chunked prefill vs one-token path: steps to first token ------------
-    one = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len,
-                      prefill_chunk=1)
-    outs_one = one.generate(prompts, max_new_tokens=args.tokens)
-    assert outs_one == outs, "chunked prefill changed sampled tokens"
-    ttft_c, ttft_1 = eng.mean_ttft_steps(), one.mean_ttft_steps()
-    print(f"steps-to-first-token: {ttft_1:.1f} one-token -> {ttft_c:.1f} "
-          f"chunked ({ttft_1 / max(ttft_c, 1e-9):.1f}x fewer), "
-          f"identical tokens")
-
-    # -- modeled: HBM bytes/token + v5e roofline bound ----------------------
-    kv_packed = eng.kv_bytes()
-    bf16_cfg = dataclasses.replace(cfg, quant="none", kv_quant="none")
-    bf16_eng = ServeEngine(params, bf16_cfg, n_slots=args.slots,
-                           max_len=args.max_len)
-    kv_bf16 = bf16_eng.kv_bytes()
-
-    t_p, tok_p, bpt_p = decode_roofline(cfg, packed_bytes, kv_packed,
-                                        args.slots)
-    t_d, tok_d, bpt_d = decode_roofline(cfg, dense_bytes, kv_bf16,
-                                        args.slots)
-    print(f"HBM bytes/token: {bpt_p / 2**20:.2f} MiB packed vs "
-          f"{bpt_d / 2**20:.2f} MiB bf16")
-    print(f"v5e roofline ({HBM_BW / 1e9:.0f} GB/s HBM): "
-          f"{tok_p:,.0f} tok/s packed vs {tok_d:,.0f} tok/s bf16 "
-          f"-> {tok_p / tok_d:.2f}x modeled speedup "
-          f"(bound: {t_p.dominant})")
+    rows = [bench_format(fmt, args, params, prompts) for fmt in args.fmt]
+    if len(rows) > 1:
+        print("per-format throughput (same traffic trace):")
+        for r in rows:
+            print(f"  {r['fmt']:<12} {r['stats']['tokens_per_sec']:8.1f} "
+                  f"tok/s measured, "
+                  f"{r['roofline_tok_s']['packed']:12,.0f} tok/s v5e "
+                  f"roofline, "
+                  f"{r['bytes']['gemm_bits_per_elem']:.2f} bits/elem")
 
     if args.obs_out:
         os.makedirs(args.obs_out, exist_ok=True)
@@ -157,15 +199,11 @@ def main():
             "bench": "serve_bench",
             "backend": jax.default_backend(),
             "config": {k: getattr(args, k) for k in
-                       ("slots", "requests", "prompt_len", "tokens",
+                       ("fmt", "slots", "requests", "prompt_len", "tokens",
                         "d_model", "layers", "max_len", "kv_quant",
                         "prefill_chunk", "prefill_budget")},
-            "stats": sd,
-            "ttft_steps": {"chunked": ttft_c, "one_token": ttft_1},
-            "bytes": {"weights_bf16": dense_bytes,
-                      "weights_packed": packed_bytes,
-                      "per_token_packed": bpt_p, "per_token_bf16": bpt_d},
-            "roofline_tok_s": {"packed": tok_p, "bf16": tok_d},
+            "formats": {r["fmt"]: {k: v for k, v in r.items() if k != "fmt"}
+                        for r in rows},
         }
         path = os.path.join(args.obs_out, "serve_stats.json")
         with open(path, "w") as f:

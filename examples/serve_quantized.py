@@ -1,14 +1,16 @@
 """Serving driver — thin wrapper over the packed-weight engine.
 
 Pipeline (the paper's deployment path, repro.serve):
-  1. offline prequantization: bf16 params -> packed Sg-EM streams
-     (4.5 bits/element resident; weights never rematerialize in bf16),
+  1. offline prequantization: bf16 params -> the packed streams of the
+     --fmt codec (m2xfp: Sg-EM, 4.5 bits/element resident; any packable
+     repro.core.codecs entry; weights never rematerialize in bf16),
      round-tripped through a packed checkpoint;
   2. continuous-batching decode: requests with different prompt lengths
      share the batch, admitted/evicted per slot while the engine keeps
      stepping (quantized KV-cache pages with --kv-quant).
 
     PYTHONPATH=src python examples/serve_quantized.py --tokens 16
+    PYTHONPATH=src python examples/serve_quantized.py --fmt nvfp4
 """
 import argparse
 import tempfile
@@ -16,6 +18,7 @@ import tempfile
 import jax
 import numpy as np
 
+from repro.core.codecs import packed_codecs
 from repro.models.config import ModelConfig
 from repro.models.model import init_params
 from repro.serve import (
@@ -26,6 +29,8 @@ from repro.serve import (
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--fmt", default="m2xfp", choices=list(packed_codecs()),
+                    help="packed weight codec served from the checkpoint")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -40,12 +45,13 @@ def main():
         d_model=args.d_model, n_heads=args.d_model // 32,
         n_kv_heads=args.d_model // 64, d_ff=3 * args.d_model,
         vocab_size=4096, remat=False, quant="serve",
+        quant_format=args.fmt,
         kv_quant="m2xfp" if args.kv_quant else "none")
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     packed = prequantize_params(params, cfg)
     print(f"weights: {tree_nbytes(params) / 2**20:.1f} MiB bf16 -> "
-          f"{tree_nbytes(packed) / 2**20:.1f} MiB packed M2XFP")
+          f"{tree_nbytes(packed) / 2**20:.1f} MiB packed {args.fmt}")
 
     # the engine loads from the packed checkpoint, proving bf16 weights are
     # not needed at serving time

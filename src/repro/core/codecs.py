@@ -1,0 +1,427 @@
+"""Codec registry — one format abstraction for the whole stack.
+
+The paper's claims are *comparative* (M2XFP vs MXFP4/NVFP4/SMX4, Tbl. 2/3),
+so every layer that speaks a format — fake-quant in the training graph,
+packed serving weights, the fused dequant-GEMM kernels, the quantized KV
+cache, prequantized checkpoints, and the health telemetry — goes through
+one :class:`Codec` record looked up by name instead of per-module
+``fmt == "..."`` string chains. Adding a format is one ``register_codec``
+call; everything downstream (``quantized_matmul``, ``ServeEngine``,
+``serve_bench --fmt``) picks it up.
+
+A codec always provides the fake-quant pair (both operate group-wise along
+the **last** axis, like ``repro.core.formats``). The packed serving path
+(``encode``/``decode``/``kernel``) and the packed KV path
+(``kv_encode``/``kv_decode``/``kv_spec``) are optional — formats without
+them can still be fake-quant benchmarked, and asking for a missing path
+raises a ``ValueError`` naming the codecs that do support it.
+
+Packed-stream conventions (shared with ``repro.kernels.layout``):
+
+  * ``encode(w)``: (K, N) f32 -> dict of 2-D streams, quantization groups
+    along K (the GEMM contraction axis), codes nibble-packed in the
+    group-half interleaved kernel layout (K % 32 == 0).
+  * ``decode(streams, k, n)``: exact inverse to f32 (K, N) — bit-identical
+    to the codec's ``fake_quant_weight`` of the original tensor.
+  * ``decode_dtype``: narrowest dtype the decode is *exact* in. bf16 for
+    E8M0-scaled codecs (every decoded value fits 8 mantissa bits); f32 for
+    NVFP4 (the per-tensor scale is an arbitrary f32).
+  * ``kernel(x, streams)``: optional fused dequant-GEMM (Pallas on TPU,
+    interpret elsewhere); absent codecs serve through the XLA decode
+    mirror in ``repro.models.quant``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dtypes import (
+    FP4_E2M1, exp2int, fp4_code_to_value, fp4_value_to_code, round_to_grid,
+)
+from .ebw import format_ebw
+from .formats import (
+    quantize_fp4_fp16scale, quantize_mxfp4, quantize_nvfp4, quantize_smx4,
+)
+from .m2xfp import (
+    quantize_act_m2nvfp4, quantize_act_m2xfp, quantize_weight_m2nvfp4,
+    quantize_weight_m2xfp, sg_em_dequant_with_scale,
+)
+from .packing import (
+    group_reshape, pack_meta2, pack_nibbles, unpack_meta2, unpack_nibbles,
+)
+from .scaling import e8m0_decode, e8m0_encode, shared_scale_exponent
+
+__all__ = [
+    "Codec", "PackedTensor", "register_codec", "get_codec", "list_codecs",
+    "packed_codecs", "kv_codecs", "kernel_codecs",
+]
+
+GROUP = 32
+SUBGROUP = 8
+N_SUB = GROUP // SUBGROUP
+
+
+# ---------------------------------------------------------------------------
+# Codec record + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One MX-family format: fake-quant always, packed paths optional."""
+
+    name: str
+    group: int
+    ebw: float
+    fake_quant_weight: Callable[[jax.Array], jax.Array]
+    fake_quant_act: Callable[[jax.Array], jax.Array]
+    # packed serving weights
+    encode: Optional[Callable] = None          # (K, N) f32 -> {name: 2-D}
+    decode: Optional[Callable] = None          # (streams, k, n) -> f32 (K, N)
+    decode_dtype: Any = jnp.bfloat16           # narrowest exact decode dtype
+    kernel: Optional[Callable] = None          # fused dequant-GEMM hook
+    # packed KV cache
+    kv_encode: Optional[Callable] = None       # (..., hd) -> {name: u8}
+    kv_decode: Optional[Callable] = None       # inverse -> bf16 (..., hd)
+    kv_spec: Optional[Callable] = None         # (b, w, nkv, hd) -> zero page
+    # telemetry hints (repro.obs.quant_health)
+    scale_kind: str = "e8m0"                   # e8m0 | e4m3 | f16
+    scale_sat_bounds: Optional[Tuple[int, int]] = None  # saturated byte bounds
+    has_meta: bool = False                     # streams carry 2-bit metadata
+    # False when fake_quant_act scales per tensor (nvfp4-style): the online
+    # activation quantization then depends on which tokens share a launch,
+    # so chunked prefill / batched decode are NOT bit-identical to serving
+    # token-by-token (same root cause that rules out a packed KV path)
+    act_batch_invariant: bool = True
+
+    @property
+    def packed(self) -> bool:
+        return self.encode is not None
+
+    @property
+    def kv_capable(self) -> bool:
+        return self.kv_encode is not None
+
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec, overwrite: bool = False) -> Codec:
+    """Add a codec to the registry (``overwrite=True`` to replace)."""
+    if codec.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"codec {codec.name!r} already registered "
+            f"(pass overwrite=True to replace)")
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    """Registry lookup; unknown names raise listing every registered codec."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered codecs: "
+            f"{', '.join(list_codecs())}") from None
+
+
+def list_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def packed_codecs() -> Tuple[str, ...]:
+    """Codecs with a packed serving-weight path (encode/decode)."""
+    return tuple(n for n in list_codecs() if _REGISTRY[n].packed)
+
+
+def kv_codecs() -> Tuple[str, ...]:
+    """Codecs with a packed KV-cache path."""
+    return tuple(n for n in list_codecs() if _REGISTRY[n].kv_capable)
+
+
+def kernel_codecs() -> Tuple[str, ...]:
+    """Codecs with a fused dequant-GEMM kernel hook."""
+    return tuple(n for n in list_codecs() if _REGISTRY[n].kernel is not None)
+
+
+# ---------------------------------------------------------------------------
+# Codec-tagged packed pytree
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+class PackedTensor:
+    """Packed weight/tensor pytree tagged with its codec name.
+
+    ``streams`` maps stream name -> u8/f32 array; the logical dense shape
+    and codec ride in the (static) aux data, so jit/vmap/eval_shape all see
+    them as compile-time constants. Children are key-flattened under their
+    stream names (``codes``/``scales``/``meta``/...) so checkpoint leaf
+    paths and sharding rules see the same names for every codec."""
+
+    def __init__(self, streams: dict, shape, codec: str = "m2xfp"):
+        self.streams = dict(streams)
+        self.shape = tuple(shape)
+        self.codec = codec
+
+    def tree_flatten_with_keys(self):
+        k = jax.tree_util.GetAttrKey
+        names = tuple(self.streams)
+        return (tuple((k(n), self.streams[n]) for n in names),
+                (self.shape, self.codec, names))
+
+    def tree_flatten(self):
+        names = tuple(self.streams)
+        return (tuple(self.streams[n] for n in names),
+                (self.shape, self.codec, names))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, codec, names = aux
+        return cls(dict(zip(names, children)), shape, codec)
+
+    def __getattr__(self, name):   # p.codes / p.scales / p.meta sugar
+        try:
+            return self.__dict__["streams"][name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __getitem__(self, key):    # dict-style access for convenience
+        if key == "shape":
+            return self.shape
+        return self.streams[key]
+
+    def __repr__(self):
+        return (f"PackedTensor(codec={self.codec!r}, shape={self.shape}, "
+                f"streams={list(self.streams)})")
+
+
+# ---------------------------------------------------------------------------
+# Packed weight encode/decode (XLA mirrors of the kernel layouts)
+# ---------------------------------------------------------------------------
+
+def _unpack_codes(codes: jax.Array, k: int, n: int) -> jax.Array:
+    """Group-half interleaved u8 (K/2, N) -> int32 sign-mag codes (K, N)."""
+    pg = codes.reshape(k // GROUP, 16, n)
+    return jnp.concatenate(
+        [(pg & 0xF).astype(jnp.int32), (pg >> 4).astype(jnp.int32)], axis=1
+    ).reshape(k, n)
+
+
+def _encode_sgem(w: jax.Array) -> dict:
+    from repro.kernels.layout import pack_w_sgem
+    return pack_w_sgem(w)
+
+
+def _decode_sgem(streams: dict, k: int, n: int) -> jax.Array:
+    """Sg-EM-2bit decode: fp4 * (1 + meta/4) * 2^(scale-127)."""
+    c = _unpack_codes(streams["codes"], k, n)
+    mag = fp4_code_to_value(c & 7)
+    sign = jnp.where((c & 8) != 0, -1.0, 1.0)
+    scales = exp2int(streams["scales"].astype(jnp.int32) - 127)
+    meta = streams["meta"]
+    fields = jnp.stack(
+        [(meta >> (2 * j)) & 0x3 for j in range(N_SUB)], axis=1
+    ).astype(jnp.float32)
+    mult = 1.0 + fields[:, :, None, :] / 4.0               # (K/32, 4, 1, n)
+    w = (mag * sign).reshape(k // GROUP, N_SUB, SUBGROUP, n) * mult \
+        * scales[:, None, None, :]
+    return w.reshape(k, n)
+
+
+def _encode_mxfp4(w: jax.Array) -> dict:
+    from repro.kernels.layout import pack_w_mxfp4
+    return pack_w_mxfp4(w)
+
+
+def _decode_mxfp4(streams: dict, k: int, n: int) -> jax.Array:
+    c = _unpack_codes(streams["codes"], k, n)
+    mag = fp4_code_to_value(c & 7)
+    sign = jnp.where((c & 8) != 0, -1.0, 1.0)
+    scales = exp2int(streams["scales"].astype(jnp.int32) - 127)
+    w = (mag * sign).reshape(k // GROUP, GROUP, n) * scales[:, None, :]
+    return w.reshape(k, n)
+
+
+def _encode_nvfp4(w: jax.Array) -> dict:
+    from repro.kernels.layout import pack_w_nvfp4
+    return pack_w_nvfp4(w)
+
+
+def _decode_nvfp4(streams: dict, k: int, n: int) -> jax.Array:
+    """NVFP4 decode: fp4 * (e4m3 group scale * f32 tensor scale). Exact in
+    f32 only — the tensor scale is an arbitrary float."""
+    c = _unpack_codes(streams["codes"], k, n)
+    mag = fp4_code_to_value(c & 7)
+    sign = jnp.where((c & 8) != 0, -1.0, 1.0)
+    s8 = jax.lax.bitcast_convert_type(
+        streams["scales"], jnp.float8_e4m3fn).astype(jnp.float32)
+    s = s8 * streams["tscale"].reshape(())
+    s = jnp.where(s == 0, 1.0, s)                          # mirrors encode
+    w = (mag * sign).reshape(k // 16, 16, n) * s[:, None, :]
+    return w.reshape(k, n)
+
+
+def _m2xfp_kernel(x: jax.Array, streams: dict, **kw) -> jax.Array:
+    from repro.kernels.ops import m2xfp_matmul
+    return m2xfp_matmul(x, streams, **kw)
+
+
+def _mxfp4_kernel(x: jax.Array, streams: dict, **kw) -> jax.Array:
+    from repro.kernels.ops import mxfp4_matmul
+    return mxfp4_matmul(x, streams, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Packed KV cache paths (paper Sec. 6.4: K/V are right-hand GEMM operands)
+# ---------------------------------------------------------------------------
+
+def _kv_encode_sgem(x: jax.Array) -> dict:
+    """(..., hd) -> Sg-EM fixed-scale streams (online-cheap; the adaptive
+    group-bias search is reserved for offline weight packing)."""
+    from repro.obs.quant_health import probe_scaled
+    hd = x.shape[-1]
+    xg = group_reshape(x.astype(jnp.float32), GROUP)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    e = shared_scale_exponent(amax, "floor")
+    s = exp2int(e)
+    _, k_sel, _ = sg_em_dequant_with_scale(
+        xg, s, SUBGROUP, bits=2, adaptive=False, return_codes=True)
+    s_final = (1.0 + k_sel.astype(jnp.float32) / 4.0) * s
+    xsub = xg.reshape(*xg.shape[:-1], N_SUB, SUBGROUP)
+    probe_scaled("kv_encode", xsub / s_final[..., None], e, k_sel,
+                 codec="m2xfp")
+    q = round_to_grid(xsub / s_final[..., None], FP4_E2M1)
+    mag = fp4_value_to_code(jnp.abs(q))
+    codes = jnp.where(xsub < 0, mag | 8, mag).reshape(*x.shape[:-1], hd)
+    return {
+        "codes": pack_nibbles(codes),
+        "scales": e8m0_encode(e[..., 0]),
+        "meta": pack_meta2(k_sel.reshape(*x.shape[:-1], -1)),
+    }
+
+
+def _kv_decode_sgem(p: dict) -> jax.Array:
+    codes = unpack_nibbles(p["codes"])
+    hd = codes.shape[-1]
+    mag = fp4_code_to_value(codes & 7)
+    sign = jnp.where((codes & 8) != 0, -1.0, 1.0)
+    s = e8m0_decode(p["scales"])[..., None]                  # (..., ng, 1)
+    k = unpack_meta2(p["meta"], (hd // GROUP) * N_SUB)
+    mult = 1.0 + k.astype(jnp.float32) / 4.0
+    vals = (mag * sign).reshape(*codes.shape[:-1], hd // GROUP, N_SUB,
+                                SUBGROUP)
+    out = vals * mult.reshape(*codes.shape[:-1], hd // GROUP, N_SUB, 1) \
+        * s[..., None]
+    return out.reshape(*codes.shape[:-1], hd).astype(jnp.bfloat16)
+
+
+def _kv_spec_sgem(batch: int, w: int, nkv: int, hd: int) -> dict:
+    return {
+        "codes": jnp.zeros((batch, w, nkv, hd // 2), jnp.uint8),
+        "scales": jnp.zeros((batch, w, nkv, hd // GROUP), jnp.uint8),
+        "meta": jnp.zeros((batch, w, nkv, hd // GROUP), jnp.uint8),
+    }
+
+
+def _kv_encode_mxfp4(x: jax.Array) -> dict:
+    """(..., hd) -> plain MXFP4 streams (no metadata byte)."""
+    from repro.obs.quant_health import probe_scaled
+    hd = x.shape[-1]
+    xg = group_reshape(x.astype(jnp.float32), GROUP)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    e = shared_scale_exponent(amax, "floor")
+    s = exp2int(e)
+    probe_scaled("kv_encode", xg / s, e, None, codec="mxfp4")
+    q = round_to_grid(xg / s, FP4_E2M1)
+    mag = fp4_value_to_code(jnp.abs(q))
+    codes = jnp.where(xg < 0, mag | 8, mag).reshape(*x.shape[:-1], hd)
+    return {
+        "codes": pack_nibbles(codes),
+        "scales": e8m0_encode(e[..., 0]),
+    }
+
+
+def _kv_decode_mxfp4(p: dict) -> jax.Array:
+    codes = unpack_nibbles(p["codes"])
+    hd = codes.shape[-1]
+    mag = fp4_code_to_value(codes & 7)
+    sign = jnp.where((codes & 8) != 0, -1.0, 1.0)
+    s = e8m0_decode(p["scales"])[..., None]
+    vals = (mag * sign).reshape(*codes.shape[:-1], hd // GROUP, GROUP) * s
+    return vals.reshape(*codes.shape[:-1], hd).astype(jnp.bfloat16)
+
+
+def _kv_spec_mxfp4(batch: int, w: int, nkv: int, hd: int) -> dict:
+    return {
+        "codes": jnp.zeros((batch, w, nkv, hd // 2), jnp.uint8),
+        "scales": jnp.zeros((batch, w, nkv, hd // GROUP), jnp.uint8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Built-in codecs (the paper's format matrix)
+# ---------------------------------------------------------------------------
+
+register_codec(Codec(
+    name="m2xfp", group=32, ebw=format_ebw("m2xfp"),
+    fake_quant_weight=quantize_weight_m2xfp,
+    fake_quant_act=quantize_act_m2xfp,
+    encode=_encode_sgem, decode=_decode_sgem, decode_dtype=jnp.bfloat16,
+    kernel=_m2xfp_kernel,
+    kv_encode=_kv_encode_sgem, kv_decode=_kv_decode_sgem,
+    kv_spec=_kv_spec_sgem,
+    scale_kind="e8m0", scale_sat_bounds=(1, 254), has_meta=True))
+
+# Ablation (paper Tbl. 4): weights identical to m2xfp; activations refine
+# the subgroup top-1 with an *unclamped* FP6 instead of the 2-bit encoding.
+register_codec(Codec(
+    name="m2xfp_ideal6", group=32, ebw=format_ebw("m2xfp"),
+    fake_quant_weight=quantize_weight_m2xfp,
+    fake_quant_act=partial(quantize_act_m2xfp, encoding="ideal"),
+    encode=_encode_sgem, decode=_decode_sgem, decode_dtype=jnp.bfloat16,
+    kernel=_m2xfp_kernel,
+    kv_encode=_kv_encode_sgem, kv_decode=_kv_decode_sgem,
+    kv_spec=_kv_spec_sgem,
+    scale_kind="e8m0", scale_sat_bounds=(1, 254), has_meta=True))
+
+register_codec(Codec(
+    name="m2nvfp4", group=16, ebw=format_ebw("m2nvfp4"),
+    fake_quant_weight=quantize_weight_m2nvfp4,
+    fake_quant_act=quantize_act_m2nvfp4,
+    scale_kind="e4m3", act_batch_invariant=False))
+
+register_codec(Codec(
+    name="mxfp4", group=32, ebw=format_ebw("mxfp4"),
+    fake_quant_weight=quantize_mxfp4,
+    fake_quant_act=quantize_mxfp4,
+    encode=_encode_mxfp4, decode=_decode_mxfp4, decode_dtype=jnp.bfloat16,
+    kernel=_mxfp4_kernel,
+    kv_encode=_kv_encode_mxfp4, kv_decode=_kv_decode_mxfp4,
+    kv_spec=_kv_spec_mxfp4,
+    scale_kind="e8m0", scale_sat_bounds=(1, 254)))
+
+# NVFP4's element scale is (e4m3 byte) * (per-tensor f32): exact decode
+# needs f32, and per-call tensor scales make online KV packing order-
+# dependent (chunked vs sequential prefill would diverge) — no KV path.
+register_codec(Codec(
+    name="nvfp4", group=16, ebw=format_ebw("nvfp4"),
+    fake_quant_weight=quantize_nvfp4,
+    fake_quant_act=quantize_nvfp4,
+    encode=_encode_nvfp4, decode=_decode_nvfp4, decode_dtype=jnp.float32,
+    scale_kind="e4m3", scale_sat_bounds=(0, 126),
+    act_batch_invariant=False))
+
+register_codec(Codec(
+    name="smx4", group=16, ebw=format_ebw("smx4"),
+    fake_quant_weight=quantize_smx4,
+    fake_quant_act=quantize_smx4))
+
+register_codec(Codec(
+    name="fp4", group=32, ebw=format_ebw("fp4_fp16scale"),
+    fake_quant_weight=quantize_fp4_fp16scale,
+    fake_quant_act=quantize_fp4_fp16scale,
+    scale_kind="f16"))

@@ -208,8 +208,8 @@ def param_shardings(params, mesh: Mesh, rules: Optional[dict] = None):
     with use_sharding(mesh, rules):
         def leaf_sharding(path, leaf):
             names = _path_names(path)
-            # PackedWeight children end in codes/scales/meta
-            if names and names[-1] in ("codes", "scales", "meta"):
+            # PackedTensor children end in codes/scales/meta/tscale
+            if names and names[-1] in ("codes", "scales", "meta", "tscale"):
                 names = names[:-1]
             axes = infer_logical_axes(names, leaf.shape)
             return NamedSharding(mesh, logical_to_spec(axes, leaf.shape))
@@ -240,7 +240,8 @@ def cache_shardings(caches, mesh: Mesh, rules: Optional[dict] = None):
         def leaf_sharding(path, leaf):
             names = _path_names(path)
             name = names[-1] if names else ""
-            if name in ("codes", "scales", "meta") and len(names) >= 2:
+            if name in ("codes", "scales", "meta", "tscale") \
+                    and len(names) >= 2:
                 name = names[-2]            # quantized KV streams -> k/v axes
             axes = _CACHE_AXES.get(name, (None,) * leaf.ndim)
             axes = axes[:leaf.ndim]

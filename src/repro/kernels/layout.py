@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.dtypes import FP4_E2M1, exp2int, round_to_grid
+from repro.core.dtypes import FP4_E2M1, FP8_E4M3, exp2int, round_to_grid
 from repro.core.m2xfp import elem_em_encode_parts, sg_em_dequant_with_scale
 from repro.core.packing import group_reshape
 from repro.core.scaling import e8m0_encode, shared_scale_exponent
@@ -31,7 +31,7 @@ N_SUB = GROUP // SUBGROUP
 
 __all__ = [
     "GROUP", "SUBGROUP", "N_SUB",
-    "pack_w_sgem", "pack_w_mxfp4", "pack_x_elem_em",
+    "pack_w_sgem", "pack_w_mxfp4", "pack_w_nvfp4", "pack_x_elem_em",
     "interleave_pack", "interleave_unpack",
 ]
 
@@ -108,6 +108,36 @@ def pack_w_mxfp4(w: jax.Array, rule: str = "floor"):
     return {
         "codes": interleave_pack(codes),
         "scales": e8m0_encode(e[..., 0]).T,            # (K/32, N)
+    }
+
+
+def pack_w_nvfp4(w: jax.Array):
+    """NVFP4 pack of weights (K, N): FP4 codes (group-half interleaved, so
+    K % 32 == 0 like every packed operand), one E4M3 scale byte per group
+    of 16 along K, and one f32 per-tensor scale.
+
+    Returns dict(codes u8 (K/2,N), scales u8 (K/16,N), tscale f32 (1,1)).
+    The scale math mirrors ``repro.core.formats.quantize_nvfp4`` exactly, so
+    decode(pack(w)) == quantize_nvfp4(w-groups) bit-for-bit in f32.
+    """
+    k, n = w.shape
+    wt = w.astype(jnp.float32).T                       # (N, K), groups on last
+    xg = group_reshape(wt, 16)                         # (N, K/16, 16)
+    amax_t = jnp.max(jnp.abs(wt))
+    t = amax_t / (FP8_E4M3.max_value * FP4_E2M1.max_value)
+    t = jnp.where(t == 0, 1.0, t)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    s8 = round_to_grid(amax / (FP4_E2M1.max_value * t), FP8_E4M3)
+    s = s8 * t
+    s = jnp.where(s == 0, 1.0, s)
+    q = round_to_grid(xg / s, FP4_E2M1)
+    codes = _sign_mag(q, xg < 0).reshape(n, k).T       # (K, N)
+    sbytes = jax.lax.bitcast_convert_type(             # e4m3 grid -> exact
+        s8[..., 0].astype(jnp.float8_e4m3fn), jnp.uint8).T   # (K/16, N)
+    return {
+        "codes": interleave_pack(codes),
+        "scales": sbytes,
+        "tscale": t.reshape(1, 1),
     }
 
 

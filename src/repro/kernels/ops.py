@@ -16,9 +16,9 @@ from .m2xfp_quantize import m2xfp_quantize_kernel
 from .mxfp4_matmul import mxfp4_matmul_kernel
 
 __all__ = [
-    "on_tpu", "serve_block_m", "m2xfp_matmul", "m2xfp_qmatmul",
-    "mxfp4_matmul", "m2xfp_quantize", "pack_w_sgem", "pack_w_mxfp4",
-    "pack_x_elem_em",
+    "on_tpu", "serve_block_m", "packed_matmul", "m2xfp_matmul",
+    "m2xfp_qmatmul", "mxfp4_matmul", "m2xfp_quantize", "pack_w_sgem",
+    "pack_w_mxfp4", "pack_x_elem_em",
 ]
 
 
@@ -70,6 +70,21 @@ def mxfp4_matmul(x: jax.Array, w_packed: dict, *,
         xp, w_packed["codes"], w_packed["scales"],
         bm=bm, bn=block_n, bk=block_k, interpret=not on_tpu())
     return out[:m]
+
+
+def packed_matmul(x: jax.Array, w_packed: dict, fmt: str, **kw) -> jax.Array:
+    """Codec-dispatched packed GEMM: x (M, K) @ ``fmt``-packed W -> f32.
+
+    Thin registry front door over the per-codec kernels; raises for codecs
+    without a Pallas kernel (e.g. nvfp4 serves through the XLA decode
+    mirror — see repro.models.quant._serve_matmul)."""
+    from repro.core.codecs import get_codec, kernel_codecs
+    codec = get_codec(fmt)
+    if codec.kernel is None:
+        raise ValueError(
+            f"codec {fmt!r} has no Pallas serve kernel; kernel-backed "
+            f"codecs: {', '.join(kernel_codecs())}")
+    return codec.kernel(x, w_packed, **kw)
 
 
 def m2xfp_qmatmul(x_packed: dict, w_packed: dict, *, block_m: int = 128,

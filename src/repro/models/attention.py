@@ -244,7 +244,7 @@ def _attend_one(q, k_new, v_new, out_dtype, cfg, cache, index, window,
     sequence-sharded ('kv_seq' -> TP axis); the softmax reduction over W
     crosses shards (GSPMD ring-attention-equivalent)."""
     b = q.shape[0]
-    quantized_kv = cfg.kv_quant == "m2xfp"
+    quantized_kv = cfg.kv_quant != "none"
     w = (cache["k"]["codes"] if quantized_kv else cache["k"]).shape[1]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     per_slot = jnp.ndim(index) == 1
@@ -260,18 +260,18 @@ def _attend_one(q, k_new, v_new, out_dtype, cfg, cache, index, window,
         from .kvquant import kv_decode, kv_encode, kv_page_write
         kc, vc = {}, {}
         for name, new, store in (("k", k_new, kc), ("v", v_new, vc)):
-            enc = kv_encode(new)
+            enc = kv_encode(new, cfg.kv_quant)
             if per_slot:
                 upd = kv_page_write(cache[name], enc, slot, valid)
             else:
                 upd = {key: jax.lax.dynamic_update_slice(
                     cache[name][key], enc[key], (0, slot, 0, 0))
-                    for key in ("codes", "scales", "meta")}
-            for key in ("codes", "scales", "meta"):
+                    for key in enc}
+            for key in upd:
                 store[key] = constrain(
                     upd[key], ("batch", "kv_seq", "kv_heads", None))
-        k = kv_decode(kc)
-        v = kv_decode(vc)
+        k = kv_decode(kc, cfg.kv_quant)
+        v = kv_decode(vc, cfg.kv_quant)
     else:
         if per_slot:
             k = _masked_rows(
@@ -384,8 +384,9 @@ def attention_prefill(
 def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,
                dtype=jnp.bfloat16, per_slot: bool = False) -> dict:
     """Empty ring-buffer cache. Size = min(window, max_len) when windowed.
-    cfg.kv_quant == 'm2xfp': K/V stored as packed Sg-EM streams (Sec. 6.4,
-    4.5 bits/elem resident).
+    cfg.kv_quant != 'none': K/V stored as the named codec's packed streams
+    (Sec. 6.4 — e.g. 'm2xfp' = Sg-EM at 4.5 bits/elem resident; any codec
+    in ``repro.core.codecs.kv_codecs()``).
 
     ``per_slot=True`` gives the paged layout used by the serving engine:
     positions are tracked per batch row ((B, W) instead of (W,)) so each
@@ -393,11 +394,13 @@ def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,
     ``attention_decode`` must then be called with a (B,) index vector."""
     w = min(window, max_len) if window else max_len
     pos_shape = (batch, w) if per_slot else (w,)
-    if cfg.kv_quant == "m2xfp":
+    if cfg.kv_quant != "none":
         from .kvquant import kv_cache_spec
         return {
-            "k": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd),
-            "v": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd),
+            "k": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd,
+                               cfg.kv_quant),
+            "v": kv_cache_spec(batch, w, cfg.n_kv_heads, cfg.hd,
+                               cfg.kv_quant),
             "pos": jnp.full(pos_shape, -1, jnp.int32),
         }
     return {

@@ -1,93 +1,78 @@
-"""M2XFP KV-cache quantization (paper Sec. 6.4).
+"""Quantized KV cache (paper Sec. 6.4) — codec-dispatched.
 
-K/V are right-hand GEMM operands (P = Q K^T, O = P V), so per the paper the
-Sg-EM weight-style format applies to them: groups of 32 along head_dim with
-an E8M0 scale + 2-bit subgroup multipliers -> 4.5 bits/element resident
-instead of 16. The decode write path quantizes each new token's K/V online
-(fixed-scale Sg-EM: the 4-candidate multiplier search is cheap and
-deterministic); reads dequantize inline before the attention contractions.
+K/V are right-hand GEMM operands (P = Q K^T, O = P V), so the weight-style
+packed formats apply to them: groups along head_dim with a shared scale
+(+ metadata for m2xfp) resident instead of 16-bit. The decode write path
+quantizes each new token's K/V online (for m2xfp: fixed-scale Sg-EM — the
+4-candidate multiplier search is cheap and deterministic); reads dequantize
+inline before the attention contractions.
 
-Capacity win: 3.55x smaller KV cache (e.g. musicgen-large decode_32k:
-21.5 -> ~8 GiB/device). Traffic win additionally requires fusing the decode
-into the attention kernel (the Pallas m2xfp kernels demonstrate the decode
-path in-kernel; see EXPERIMENTS.md §Perf).
+Which codecs can back the cache is a registry property (``kv_codecs()``):
+the encode must be *order-independent* so chunked prefill and sequential
+decode write identical pages. m2xfp (4.5 bits/elem, 3.55x smaller cache —
+e.g. musicgen-large decode_32k: 21.5 -> ~8 GiB/device) and mxfp4 (4.25)
+qualify; nvfp4 does not (its per-call tensor scale depends on the batch of
+values seen together) and asking for it raises an actionable error.
+
+Traffic wins additionally require fusing the decode into the attention
+kernel (the Pallas m2xfp kernels demonstrate the decode path in-kernel; see
+EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dtypes import exp2int, round_to_grid, FP4_E2M1, \
-    fp4_value_to_code, fp4_code_to_value
-from repro.core.m2xfp import sg_em_dequant_with_scale
-from repro.core.packing import (
-    group_reshape, pack_meta2, pack_nibbles, unpack_meta2, unpack_nibbles,
-)
-from repro.core.scaling import e8m0_decode, e8m0_encode, shared_scale_exponent
+from repro.core.codecs import get_codec, kv_codecs
 
 GROUP = 32
 SUBGROUP = 8
 N_SUB = GROUP // SUBGROUP
 
-__all__ = ["kv_encode", "kv_decode", "kv_cache_spec", "kv_page_write"]
+__all__ = ["kv_codec", "kv_encode", "kv_decode", "kv_cache_spec",
+           "kv_page_write"]
 
 
-def kv_encode(x: jax.Array) -> dict:
-    """(..., hd) -> {codes (..., hd/2) u8, scales (..., hd/32) u8,
-    meta (..., hd/32) u8}. Sg-EM fixed-scale (online-cheap).
+def kv_codec(fmt: str):
+    """Resolve ``fmt`` to a codec with a packed KV path, or raise with the
+    list of codecs that have one."""
+    codec = get_codec(fmt)
+    if not codec.kv_capable:
+        raise ValueError(
+            f"codec {fmt!r} has no packed KV-cache path (its encode is not "
+            f"order-independent or not implemented); KV-capable codecs: "
+            f"{', '.join(kv_codecs())}")
+    return codec
+
+
+def kv_encode(x: jax.Array, fmt: str = "m2xfp") -> dict:
+    """(..., hd) -> packed stream dict (for m2xfp: codes (..., hd/2) u8,
+    scales (..., hd/32) u8, meta (..., hd/32) u8).
 
     With the ``health`` pillar of REPRO_OBS enabled at trace time, clip /
     scale-saturation / meta-mode reductions over the encoded tokens are
     traced in and drained host-side asynchronously (repro.obs.quant_health
     — the encoder's own intermediates are reused, so the probe adds only
     small reductions)."""
-    from repro.obs.quant_health import probe_scaled
-    hd = x.shape[-1]
-    xg = group_reshape(x.astype(jnp.float32), GROUP)
-    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
-    e = shared_scale_exponent(amax, "floor")
-    s = exp2int(e)
-    _, k_sel, _ = sg_em_dequant_with_scale(
-        xg, s, SUBGROUP, bits=2, adaptive=False, return_codes=True)
-    s_final = (1.0 + k_sel.astype(jnp.float32) / 4.0) * s
-    xsub = xg.reshape(*xg.shape[:-1], N_SUB, SUBGROUP)
-    probe_scaled("kv_encode", xsub / s_final[..., None], e, k_sel)
-    q = round_to_grid(xsub / s_final[..., None], FP4_E2M1)
-    mag = fp4_value_to_code(jnp.abs(q))
-    codes = jnp.where(xsub < 0, mag | 8, mag).reshape(*x.shape[:-1], hd)
-    return {
-        "codes": pack_nibbles(codes),
-        "scales": e8m0_encode(e[..., 0]),
-        "meta": pack_meta2(k_sel.reshape(*x.shape[:-1], -1)),
-    }
+    return kv_codec(fmt).kv_encode(x)
 
 
-def kv_decode(p: dict) -> jax.Array:
+def kv_decode(p: dict, fmt: str = "m2xfp") -> jax.Array:
     """Inverse of kv_encode -> bf16 (..., hd)."""
-    codes = unpack_nibbles(p["codes"])
-    hd = codes.shape[-1]
-    mag = fp4_code_to_value(codes & 7)
-    sign = jnp.where((codes & 8) != 0, -1.0, 1.0)
-    s = e8m0_decode(p["scales"])[..., None]                  # (..., ng, 1)
-    k = unpack_meta2(p["meta"], (hd // GROUP) * N_SUB)
-    mult = 1.0 + k.astype(jnp.float32) / 4.0
-    vals = (mag * sign).reshape(*codes.shape[:-1], hd // GROUP, N_SUB,
-                                SUBGROUP)
-    out = vals * mult.reshape(*codes.shape[:-1], hd // GROUP, N_SUB, 1) \
-        * s[..., None]
-    return out.reshape(*codes.shape[:-1], hd).astype(jnp.bfloat16)
+    return kv_codec(fmt).kv_decode(p)
 
 
 def kv_page_write(page: dict, enc: dict, slot: jax.Array,
                   valid: jax.Array | None = None) -> dict:
     """Vectorized per-slot ring write of one encoded token per batch row.
 
-    ``page``: a packed K or V page — {"codes", "scales", "meta"} u8 streams
-    with leading (B, W) axes. ``enc``: ``kv_encode`` output with leading
-    (B, 1). ``slot`` (B,): ring offset per row (``index % W``). ``valid``
-    (B,) bool, optional: rows with False keep their page bytes untouched —
-    the masked write the chunked-prefill path uses for positions past a
-    slot's chunk length. Returns the updated page dict."""
+    ``page``: a packed K or V page — dict of u8 streams with leading (B, W)
+    axes (whatever streams the codec defines). ``enc``: ``kv_encode``
+    output with leading (B, 1). ``slot`` (B,): ring offset per row
+    (``index % W``). ``valid`` (B,) bool, optional: rows with False keep
+    their page bytes untouched — the masked write the chunked-prefill path
+    uses for positions past a slot's chunk length. Returns the updated
+    page dict."""
     def write(buf, new):
         upd = jax.vmap(
             lambda b, n, s: jax.lax.dynamic_update_slice(
@@ -98,13 +83,10 @@ def kv_page_write(page: dict, enc: dict, slot: jax.Array,
         return jnp.where(
             valid.reshape((-1,) + (1,) * (buf.ndim - 1)), upd, buf)
 
-    return {key: write(page[key], enc[key])
-            for key in ("codes", "scales", "meta")}
+    return {key: write(page[key], enc[key]) for key in page}
 
 
-def kv_cache_spec(batch: int, w: int, nkv: int, hd: int) -> dict:
-    return {
-        "codes": jnp.zeros((batch, w, nkv, hd // 2), jnp.uint8),
-        "scales": jnp.zeros((batch, w, nkv, hd // GROUP), jnp.uint8),
-        "meta": jnp.zeros((batch, w, nkv, hd // GROUP), jnp.uint8),
-    }
+def kv_cache_spec(batch: int, w: int, nkv: int, hd: int,
+                  fmt: str = "m2xfp") -> dict:
+    """Zero-initialized packed K or V page for ``fmt``."""
+    return kv_codec(fmt).kv_spec(batch, w, nkv, hd)

@@ -516,10 +516,17 @@ _SKIP_KEYS = ("router", "conv_w", "conv_b", "A_log", "D", "dt_bias", "norm",
 
 
 def pack_params_for_serving(params: dict, cfg) -> dict:
-    """Convert dense params -> packed M2XFP (4.5 bits/elem) for every GEMM
-    weight. Stacked (per-layer) weights are packed with vmap. Embedding /
-    router / recurrence params stay bf16 (not GEMM operands in the paper's
-    scope)."""
+    """Convert dense params -> packed streams of ``cfg.quant_format`` for
+    every GEMM weight (m2xfp: 4.5 bits/elem Sg-EM). Stacked (per-layer)
+    weights are packed with vmap. Embedding / router / recurrence params
+    stay bf16 (not GEMM operands in the paper's scope). Raises if the
+    configured codec has no packed serving path."""
+    from repro.core.codecs import get_codec, packed_codecs
+    fmt = cfg.quant_format
+    if not get_codec(fmt).packed:
+        raise ValueError(
+            f"cfg.quant_format={fmt!r} has no packed serving path; "
+            f"packable codecs: {', '.join(packed_codecs())}")
 
     def convert(path, leaf):
         keys = [str(getattr(p, "key", "")) for p in path]
@@ -537,8 +544,8 @@ def pack_params_for_serving(params: dict, cfg) -> dict:
             if w.shape[-2] % 32 != 0:
                 return leaf                                   # non-groupable
             if stacked:
-                return jax.vmap(pack_serving_weight)(w)
-            return pack_serving_weight(w)
+                return jax.vmap(lambda wi: pack_serving_weight(wi, fmt))(w)
+            return pack_serving_weight(w, fmt)
         return leaf
 
     flat = jax.tree_util.tree_flatten_with_path(params)[0]

@@ -47,8 +47,9 @@ def _expert_matmul(xe: jax.Array, w, quant: str, fmt: str) -> jax.Array:
 
     serve: w is a PackedWeight of the (K, E, N) transposed layout."""
     if quant == "serve" and isinstance(w, PackedWeight):
-        wd = decode_serving_weight(w)                  # (K, E, N) bf16
-        xq = fake_quant_act(xe.astype(jnp.float32)).astype(jnp.bfloat16)
+        wd = decode_serving_weight(w)                  # (K, E, N)
+        xq = fake_quant_act(
+            xe.astype(jnp.float32), w.codec).astype(wd.dtype)
         return einsum_f32acc("geck,kef->gecf", xq, wd).astype(xe.dtype)
     if quant == "qat":
         wq = ste(w, jax.vmap(lambda we: fake_quant_weight(

@@ -3,40 +3,47 @@ feature of the model substrate.
 
 Modes (ModelConfig.quant):
   none  : plain bf16/f32 GEMM.
-  qat   : fake-quant with straight-through estimator on weights (Sg-EM) and
-          activations (Elem-EM) — W4A4 simulation inside the training graph.
-  serve : weights live in HBM as *packed* M2XFP streams (u8 codes + scale +
-          meta = 4.5 bits/elem); decode happens inline before the GEMM (this
-          is the TPU analogue of the paper's PE decode path, and what the
-          roofline memory term sees). Activations are Elem-EM fake-quantized
-          online (the quantization engine).
+  qat   : fake-quant with straight-through estimator on weights and
+          activations — W4A4 simulation inside the training graph.
+  serve : weights live in HBM as *packed* codec streams (u8 codes + scale
+          [+ meta]); decode happens inline before the GEMM (this is the TPU
+          analogue of the paper's PE decode path, and what the roofline
+          memory term sees). Activations are fake-quantized online with the
+          same codec (the quantization engine).
 
-The serve GEMM dispatches per backend (``serve_matmul_backend``): on TPU the
-packed streams feed the fused dequant-GEMM Pallas kernel in
-kernels/m2xfp_matmul.py; elsewhere the pure-XLA mirror below decodes inline.
-Both are numerically identical (every decoded value is exact in bf16);
-REPRO_SERVE_KERNEL=xla|pallas forces one side (docs/kernels.md).
+Every format decision goes through the codec registry
+(``repro.core.codecs``): ``fake_quant_weight(w, fmt)`` /
+``fake_quant_act(x, fmt)`` look the codec up by name, ``pack_serving_weight``
+produces a codec-tagged :class:`PackedTensor`, and the serve GEMM dispatches
+on the *tensor's* codec — the fused Pallas kernel when the codec has one and
+the shape tiles (``serve_matmul_backend``), the pure-XLA decode mirror
+otherwise. For E8M0-scaled codecs both sides are numerically identical
+(every decoded value is exact in bf16); REPRO_SERVE_KERNEL=xla|pallas forces
+one side (docs/kernels.md).
 """
 from __future__ import annotations
 
-from functools import partial
+import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import (
-    quantize_fp4_fp16scale, quantize_mxfp4, quantize_nvfp4, quantize_smx4,
+from repro.core.codecs import (
+    PackedTensor, get_codec, kernel_codecs, packed_codecs,
 )
-from repro.core.m2xfp import quantize_act_m2xfp, quantize_weight_m2xfp
 
 GROUP = 32
 SUBGROUP = 8
 N_SUB = GROUP // SUBGROUP
 
+# Back-compat alias: the serve/obs/bench layers predating the codec registry
+# spell the packed pytree "PackedWeight".
+PackedWeight = PackedTensor
+
 __all__ = [
     "fake_quant_weight", "fake_quant_act", "ste", "pack_serving_weight",
     "decode_serving_weight", "quantized_matmul", "serve_matmul_backend",
-    "init_linear", "QLinear",
+    "init_linear", "QLinear", "PackedTensor", "PackedWeight",
 ]
 
 
@@ -47,127 +54,81 @@ def ste(x: jax.Array, qx: jax.Array) -> jax.Array:
 
 def fake_quant_weight(w: jax.Array, fmt: str = "m2xfp") -> jax.Array:
     """Weight fake-quant along the contraction (first) axis."""
+    codec = get_codec(fmt)
     wt = w.reshape(w.shape[0], -1).T        # (out, in): groups along in-dim
-    if fmt in ("m2xfp", "m2xfp_ideal6"):   # ideal6 differs on acts only
-        q = quantize_weight_m2xfp(wt)
-    elif fmt == "mxfp4":
-        q = quantize_mxfp4(wt)
-    elif fmt == "nvfp4":
-        q = quantize_nvfp4(wt)
-    elif fmt == "smx4":
-        q = quantize_smx4(wt)
-    elif fmt == "fp4":
-        q = quantize_fp4_fp16scale(wt)
-    else:
-        raise ValueError(fmt)
-    return q.T.reshape(w.shape)
+    return codec.fake_quant_weight(wt).T.reshape(w.shape)
 
 
 def fake_quant_act(x: jax.Array, fmt: str = "m2xfp") -> jax.Array:
     """Activation fake-quant along the last (contraction) axis."""
-    if fmt == "m2xfp":
-        return quantize_act_m2xfp(x)
-    if fmt == "m2xfp_ideal6":      # ablation: unclamped FP6 replacement
-        return quantize_act_m2xfp(x, encoding="ideal")
-    if fmt == "mxfp4":
-        return quantize_mxfp4(x)
-    if fmt == "nvfp4":
-        return quantize_nvfp4(x)
-    if fmt == "smx4":
-        return quantize_smx4(x)
-    if fmt == "fp4":
-        return quantize_fp4_fp16scale(x)
-    raise ValueError(fmt)
+    return get_codec(fmt).fake_quant_act(x)
 
 
 # ---------------------------------------------------------------------------
-# Serving path: packed weights (4.5 bits/elem resident in HBM)
+# Serving path: packed weights resident in HBM at the codec's EBW
 # ---------------------------------------------------------------------------
 
-@jax.tree_util.register_pytree_with_keys_class
-class PackedWeight:
-    """Packed M2XFP weight pytree (shape kept static for jit). Children are
-    key-flattened as codes/scales/meta so sharding rules see their names."""
-
-    def __init__(self, codes, scales, meta, shape):
-        self.codes, self.scales, self.meta = codes, scales, meta
-        self.shape = tuple(shape)
-
-    def tree_flatten_with_keys(self):
-        k = jax.tree_util.GetAttrKey
-        return ((k("codes"), self.codes), (k("scales"), self.scales),
-                (k("meta"), self.meta)), self.shape
-
-    def tree_flatten(self):
-        return (self.codes, self.scales, self.meta), self.shape
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, aux)
-
-    def __getitem__(self, k):  # dict-style access for convenience
-        return getattr(self, k)
+def _tail_streams(p: PackedTensor) -> tuple:
+    """Names of streams laid out (rows, *weight-tail) — i.e. everything but
+    per-tensor scalars like nvfp4's ``tscale``."""
+    tail = p.shape[1:]
+    return tuple(name for name, s in p.streams.items()
+                 if s.ndim == len(p.shape) and s.shape[1:] == tail)
 
 
-def pack_serving_weight(w: jax.Array) -> "PackedWeight":
-    """(K, N...) weight -> packed M2XFP streams, groups along K (axis 0).
+def pack_serving_weight(w: jax.Array, fmt: str = "m2xfp") -> PackedTensor:
+    """(K, N...) weight -> packed codec streams, groups along K (axis 0).
 
-    codes u8 (K/2, N...): group-half interleaved nibbles (kernel layout)
-    scales u8 (K/32, N...), meta u8 (K/32, N...)
-    """
-    from repro.kernels.layout import pack_w_sgem
+    For m2xfp: codes u8 (K/2, N...) group-half interleaved nibbles (kernel
+    layout), scales u8 (K/32, N...), meta u8 (K/32, N...). Other codecs
+    define their own streams; per-tensor scalars keep their 2-D shape."""
+    codec = get_codec(fmt)
+    if not codec.packed:
+        raise ValueError(
+            f"codec {fmt!r} has no packed serving path; packable codecs: "
+            f"{', '.join(packed_codecs())}")
     k = w.shape[0]
-    w2 = w.reshape(k, -1)
-    p = pack_w_sgem(w2)
     tail = w.shape[1:]
-    return PackedWeight(
-        codes=p["codes"].reshape(k // 2, *tail),
-        scales=p["scales"].reshape(k // GROUP, *tail),
-        meta=p["meta"].reshape(k // GROUP, *tail),
-        shape=tuple(w.shape),
-    )
+    w2 = w.reshape(k, -1)
+    n = w2.shape[1]
+    streams = {}
+    for name, s in codec.encode(w2).items():
+        if s.ndim == 2 and s.shape[1] == n:
+            streams[name] = s.reshape(s.shape[0], *tail)
+        else:
+            streams[name] = s                          # per-tensor scalar
+    return PackedTensor(streams, tuple(w.shape), fmt)
 
 
-def decode_serving_weight(p: "PackedWeight") -> jax.Array:
-    """Inline decode of packed streams -> bf16 weight (K, N...).
-
-    Pure-XLA mirror of the Pallas decode (exact: every decoded value fits in
-    bf16's 8-bit mantissa).
+def decode_serving_weight(p: PackedTensor, dtype=None) -> jax.Array:
+    """Inline decode of packed streams -> weight (K, N...) in the codec's
+    exact dtype (bf16 for E8M0-scaled codecs, f32 for nvfp4) unless
+    ``dtype`` overrides it. Pure-XLA mirror of the kernel decode.
 
     REPRO_GATHER_PACKED=1 (perf lever): constrain the u8 streams to be
     replicated along the weight-shard ('fsdp') axis *before* decoding, so
-    GSPMD all-gathers 4.5-bit codes instead of 16-bit decoded weights
+    GSPMD all-gathers the packed codes instead of 16-bit decoded weights
     (3.55x less wire traffic for the serve path's FSDP gathers)."""
     import os
+    codec = get_codec(p.codec)
+    tail_names = _tail_streams(p)
     if os.environ.get("REPRO_GATHER_PACKED", "") == "1":
         from repro.distributed.sharding import constrain
-        ndim = p["codes"].ndim
-        axes = (None,) + ("mlp",) * 0 + tuple(
-            "mlp" if i == ndim - 1 else None for i in range(1, ndim))
-        p = PackedWeight(
-            constrain(p.codes, axes), constrain(p.scales, axes),
-            constrain(p.meta, axes), p.shape)
-    shape = p["shape"]
+        streams = dict(p.streams)
+        for name in tail_names:
+            s = streams[name]
+            axes = tuple(None if i != s.ndim - 1 else "mlp"
+                         for i in range(s.ndim))
+            streams[name] = constrain(s, axes)
+        p = PackedTensor(streams, p.shape, p.codec)
+    shape = p.shape
     k = shape[0]
-    codes = p["codes"].reshape(k // 2, -1)
-    n = codes.shape[-1]
-    pg = codes.reshape(k // GROUP, 16, n)
-    c = jnp.concatenate(
-        [(pg & 0xF).astype(jnp.int32), (pg >> 4).astype(jnp.int32)], axis=1
-    ).reshape(k, n)
-    from repro.core.dtypes import fp4_code_to_value
-    mag = fp4_code_to_value(c & 7)
-    sign = jnp.where((c & 8) != 0, -1.0, 1.0)
-    from repro.core.dtypes import exp2int
-    scales = exp2int(p["scales"].reshape(k // GROUP, n).astype(jnp.int32) - 127)
-    meta = p["meta"].reshape(k // GROUP, n)
-    fields = jnp.stack(
-        [(meta >> (2 * j)) & 0x3 for j in range(N_SUB)], axis=1
-    ).astype(jnp.float32)
-    mult = 1.0 + fields[:, :, None, :] / 4.0               # (K/32, 4, 1, n)
-    w = (mag * sign).reshape(k // GROUP, N_SUB, SUBGROUP, n) * mult \
-        * scales[:, None, None, :]
-    return w.reshape(shape).astype(jnp.bfloat16)
+    n = math.prod(shape[1:])
+    streams2d = {name: (s.reshape(s.shape[0], -1) if name in tail_names
+                        else s)
+                 for name, s in p.streams.items()}
+    w = codec.decode(streams2d, k, n)
+    return w.reshape(shape).astype(dtype or codec.decode_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +136,7 @@ def decode_serving_weight(p: "PackedWeight") -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _pallas_tiles(k: int, n: int) -> bool:
-    """True when (K, N) satisfy the m2xfp_matmul alignment constraints with
+    """True when (K, N) satisfy the packed-matmul alignment constraints with
     the default (bm, bn, bk) = (128, 128, 512) blocks: bk = min(512, K)
     must be a multiple of 32 dividing K, and N must be a multiple of the
     128-lane tile (kernels/ops.py) — interpret mode tolerates narrower N,
@@ -190,12 +151,13 @@ def serve_matmul_backend() -> str:
     """Dispatch rule for the serve-path GEMM (documented in docs/kernels.md):
 
       REPRO_SERVE_KERNEL=xla     always use the pure-XLA decode mirror
-      REPRO_SERVE_KERNEL=pallas  prefer kernels/m2xfp_matmul (interpret
+      REPRO_SERVE_KERNEL=pallas  prefer the codec's fused kernel (interpret
                                  mode off-TPU — slow, for validation)
       unset / auto               Pallas on a TPU backend, XLA elsewhere
 
-    Either Pallas choice still requires the weight to satisfy
-    ``_pallas_tiles``; untileable shapes fall back to the XLA mirror.
+    Either Pallas choice still requires a codec kernel hook
+    (``kernel_codecs()``) and a weight satisfying ``_pallas_tiles``;
+    everything else falls back to the XLA mirror.
     """
     import os
     mode = os.environ.get("REPRO_SERVE_KERNEL", "auto")
@@ -208,46 +170,47 @@ def serve_matmul_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _serve_matmul(x: jax.Array, w: "PackedWeight", dims) -> jax.Array:
-    """Packed-weight GEMM: Elem-EM fake-quantize the activations online,
-    then contract against the packed Sg-EM streams. On TPU the streams feed
-    the fused dequant-GEMM Pallas kernel (weights never rematerialize in
-    bf16 in HBM); on CPU the XLA mirror decodes inline (numerically
-    identical — every decoded value is exact in bf16).
+def _serve_matmul(x: jax.Array, w: PackedTensor, dims) -> jax.Array:
+    """Packed-weight GEMM: fake-quantize the activations online with the
+    weight's codec, then contract against the packed streams. On TPU,
+    codecs with a kernel hook feed the fused dequant-GEMM Pallas kernel
+    (weights never rematerialize in bf16 in HBM); otherwise the XLA mirror
+    decodes inline.
 
     Observability (REPRO_OBS, checked at TRACE time so the disabled graph
     is byte-identical): the ``health`` pillar traces clip/scale-saturation/
     meta-mode reductions over the online-quantized activations, drained
     host-side via ``jax.debug.callback`` (asynchronous — no extra syncs on
     the launch); the ``metrics`` pillar counts which backend each GEMM
-    call site dispatched to."""
+    call site dispatched to, labeled by codec."""
     from repro import obs
     from .numerics import dot_f32acc
-    obs.quant_health.probe_act(x, site="serve_gemm")
-    xq = fake_quant_act(x.astype(jnp.float32), "m2xfp").astype(jnp.bfloat16)
+    codec = get_codec(w.codec)
+    obs.quant_health.probe_act(x, site="serve_gemm", codec=codec.name)
+    xq = codec.fake_quant_act(x.astype(jnp.float32)).astype(jnp.bfloat16)
     k = w.shape[0]
-    n = 1
-    for d in w.shape[1:]:
-        n *= d
-    use_pallas = serve_matmul_backend() == "pallas" and _pallas_tiles(k, n)
+    n = math.prod(w.shape[1:])
+    use_pallas = (serve_matmul_backend() == "pallas"
+                  and codec.kernel is not None and _pallas_tiles(k, n))
     if obs.enabled():
         obs.counter(
             "repro_serve_gemm_traces_total",
             "serve GEMM call sites traced, by dispatched backend").inc(
-            backend="pallas" if use_pallas else "xla", k=k, n=n)
+            backend="pallas" if use_pallas else "xla", codec=codec.name,
+            k=k, n=n)
     if use_pallas:
-        from repro.kernels import m2xfp_matmul
         with obs.span("trace.serve_matmul", cat="trace", backend="pallas",
-                      k=k, n=n):
-            streams = {"codes": w.codes.reshape(k // 2, n),
-                       "scales": w.scales.reshape(k // GROUP, n),
-                       "meta": w.meta.reshape(k // GROUP, n)}
-            out = m2xfp_matmul(xq.reshape(-1, k), streams)
+                      codec=codec.name, k=k, n=n):
+            streams = {name: w[name].reshape(w[name].shape[0], n)
+                       for name in _tail_streams(w)}
+            for name, s in w.streams.items():
+                streams.setdefault(name, s)            # per-tensor scalars
+            out = codec.kernel(xq.reshape(-1, k), streams)
         return out.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
     with obs.span("trace.serve_matmul", cat="trace", backend="xla",
-                  k=k, n=n):
+                  codec=codec.name, k=k, n=n):
         wd = decode_serving_weight(w)
-        out = dot_f32acc(xq, wd, dims).astype(x.dtype)
+        out = dot_f32acc(xq.astype(wd.dtype), wd, dims).astype(x.dtype)
     return out
 
 
@@ -255,10 +218,12 @@ def quantized_matmul(x: jax.Array, w, quant: str, fmt: str = "m2xfp",
                      precision=None) -> jax.Array:
     """x (..., K) @ w (K, N...) under the configured quantization mode.
 
-    ``w`` is a dense array for none/qat, a PackedWeight for serve."""
+    ``w`` is a dense array for none/qat, a PackedTensor for serve (the
+    packed tensor carries its own codec tag — ``fmt`` applies to the dense
+    fake-quant modes)."""
     from .numerics import dot_f32acc
     dims = (((x.ndim - 1,), (0,)), ((), ()))
-    if quant == "serve" and isinstance(w, PackedWeight):
+    if quant == "serve" and isinstance(w, PackedTensor):
         return _serve_matmul(x, w, dims)
     if quant == "qat":
         wq = ste(w, fake_quant_weight(w.astype(jnp.float32), fmt).astype(w.dtype))
@@ -281,9 +246,9 @@ class QLinear:
     serve-packing time."""
 
     @staticmethod
-    def pack_tree(params, predicate):
+    def pack_tree(params, predicate, fmt: str = "m2xfp"):
         """Replace every weight leaf selected by ``predicate(path)`` with its
-        packed M2XFP representation. Paths are '/'-joined key tuples."""
+        packed representation. Paths are '/'-joined key tuples."""
         flat = jax.tree_util.tree_flatten_with_path(params)[0]
         treedef = jax.tree_util.tree_structure(params)
         out = []
@@ -291,7 +256,7 @@ class QLinear:
             spath = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                              for p in path)
             if predicate(spath, leaf):
-                out.append(pack_serving_weight(leaf.astype(jnp.float32)))
+                out.append(pack_serving_weight(leaf.astype(jnp.float32), fmt))
             else:
                 out.append(leaf)
         return jax.tree_util.tree_unflatten(treedef, out)

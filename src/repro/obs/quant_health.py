@@ -2,9 +2,11 @@
 
 What the paper's accuracy claims hinge on is *observable* encoder
 behaviour: how often elements clip against the FP4 grid, how often the
-shared E8M0 scale saturates its representable range, which metadata modes
+shared scale byte saturates its representable range, which metadata modes
 the encoders actually use, and whether pack -> decode -> re-pack drifts.
-This module turns those into metrics:
+This module turns those into metrics, labeled by **codec name** (the
+format registry in ``repro.core.codecs``) so multi-format serving can be
+compared on one dashboard:
 
 * **In-jit probes** (:func:`probe_act`, :func:`drain_stats`) — tiny
   reductions traced into the serve-path GEMM / KV-encode graphs, shipped
@@ -35,7 +37,8 @@ __all__ = [
 
 # Biased E8M0 scale-byte bounds: repro.core.scaling clamps exponents to
 # [-126, 127] -> stored bytes [1, 254]. A group whose scale byte sits at a
-# bound had its exponent clipped — its elements may be misscaled.
+# bound had its exponent clipped — its elements may be misscaled. (Codecs
+# with other scale encodings carry their own bounds: Codec.scale_sat_bounds.)
 E8M0_BYTE_LOW = 1
 E8M0_BYTE_HIGH = 254
 
@@ -43,72 +46,86 @@ _FP4_MAX = 6.0          # FP4 E2M1 top grid value (|x|/s beyond it clips)
 _FP4_TOP_CODE = 7       # magnitude code of the 6.0 grid point
 
 
-def _site_counters(site: str, n, clipped, groups, sat_lo, sat_hi, meta):
+def _site_counters(site: str, codec: str, n, clipped, groups, sat_lo,
+                   sat_hi, meta):
     """Host-side accumulation of one probe's scalars into the registry."""
     counter("repro_quant_elems_total",
-            "elements seen by quantization encoders").inc(float(n), site=site)
+            "elements seen by quantization encoders").inc(
+        float(n), site=site, codec=codec)
     counter("repro_quant_clipped_total",
             "elements clipped against the FP4 grid").inc(
-        float(clipped), site=site)
+        float(clipped), site=site, codec=codec)
     counter("repro_quant_groups_total",
             "scale groups seen by quantization encoders").inc(
-        float(groups), site=site)
+        float(groups), site=site, codec=codec)
     counter("repro_quant_scale_saturated_total",
-            "groups whose E8M0 scale byte hit a [1, 254] bound").inc(
-        float(sat_lo), site=site, bound="low")
+            "groups whose scale byte hit a representable-range bound").inc(
+        float(sat_lo), site=site, codec=codec, bound="low")
     counter("repro_quant_scale_saturated_total", "").inc(
-        float(sat_hi), site=site, bound="high")
+        float(sat_hi), site=site, codec=codec, bound="high")
     mh = np.asarray(meta).reshape(-1)
     for code in range(mh.shape[0]):
         counter("repro_quant_meta_total",
                 "metadata-mode occupancy (2-bit code histogram)").inc(
-            float(mh[code]), site=site, code=str(code))
-    elems = counter("repro_quant_elems_total").value(site=site)
+            float(mh[code]), site=site, codec=codec, code=str(code))
+    elems = counter("repro_quant_elems_total").value(site=site, codec=codec)
     if elems > 0:
         gauge("repro_quant_clip_rate",
               "cumulative clipped / seen element fraction").set(
-            counter("repro_quant_clipped_total").value(site=site) / elems,
-            site=site, kind="online")
+            counter("repro_quant_clipped_total").value(
+                site=site, codec=codec) / elems,
+            site=site, codec=codec, kind="online")
 
 
-def drain_stats(site: str, stats: tuple) -> None:
+def drain_stats(site: str, codec: str, stats: tuple) -> None:
     """`jax.debug.callback` target: ``stats`` is the scalar tuple built by
     a probe. Safe to call from any thread (registry is locked)."""
-    _site_counters(site, *stats)
+    _site_counters(site, codec, *stats)
 
 
-def probe_act(x, site: str) -> None:
+def probe_act(x, site: str, codec: str = "m2xfp") -> None:
     """Trace health reductions for an activation tensor about to be
-    Elem-EM quantized (call INSIDE jit, before/independent of the encode —
-    the probe recomputes the shared scale itself). No-op unless the
-    ``health`` pillar is enabled at trace time."""
+    quantized with ``codec`` (call INSIDE jit, before/independent of the
+    encode — the probe recomputes the shared scale itself). No-op unless
+    the ``health`` pillar is enabled at trace time; codecs without an E8M0
+    shared scale skip the probe (their scale stats live in the weight
+    sweep)."""
     if not enabled("health"):
+        return
+    from repro.core.codecs import get_codec
+    cd = get_codec(codec)
+    if cd.scale_kind != "e8m0":
         return
     import jax
     import jax.numpy as jnp
-    from repro.core.m2xfp import elem_em_encode_parts
     from repro.core.packing import group_reshape
     from repro.core.scaling import shared_scale_exponent
     from repro.core.dtypes import exp2int
 
-    xg = group_reshape(x.astype(jnp.float32), 32)
+    xg = group_reshape(x.astype(jnp.float32), cd.group)
     amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
     e = shared_scale_exponent(amax, "floor")
     s = exp2int(e)
     clipped = jnp.sum(jnp.abs(xg) > _FP4_MAX * s)
     sat_lo = jnp.sum(e <= E8M0_BYTE_LOW - 127)
     sat_hi = jnp.sum(e >= E8M0_BYTE_HIGH - 127)
-    _, _, _, meta, _ = elem_em_encode_parts(xg, s, 8)
-    hist = jnp.stack([jnp.sum(meta == c) for c in range(4)])
+    if cd.has_meta:
+        from repro.core.m2xfp import elem_em_encode_parts
+        _, _, _, meta, _ = elem_em_encode_parts(xg, s, 8)
+        hist = jnp.stack([jnp.sum(meta == c) for c in range(4)])
+    else:
+        hist = jnp.zeros((4,), jnp.int32)
     stats = (jnp.asarray(x.size), clipped, jnp.asarray(e.size),
              sat_lo, sat_hi, hist)
-    jax.debug.callback(partial(drain_stats, site), stats)
+    jax.debug.callback(partial(drain_stats, site, codec), stats)
 
 
-def probe_scaled(site: str, xs_over_s, e, meta_codes) -> None:
+def probe_scaled(site: str, xs_over_s, e, meta_codes=None,
+                 codec: str = "m2xfp") -> None:
     """Probe variant for encoders that already hold the scaled values:
     ``xs_over_s`` = |x| / s per element, ``e`` integer scale exponents,
-    ``meta_codes`` int 0..3 codes (any shape). Call INSIDE jit."""
+    ``meta_codes`` int 0..3 codes (any shape; None for metadata-free
+    codecs). Call INSIDE jit."""
     if not enabled("health"):
         return
     import jax
@@ -116,10 +133,13 @@ def probe_scaled(site: str, xs_over_s, e, meta_codes) -> None:
     clipped = jnp.sum(jnp.abs(xs_over_s) > _FP4_MAX)
     sat_lo = jnp.sum(e <= E8M0_BYTE_LOW - 127)
     sat_hi = jnp.sum(e >= E8M0_BYTE_HIGH - 127)
-    hist = jnp.stack([jnp.sum(meta_codes == c) for c in range(4)])
+    if meta_codes is None:
+        hist = jnp.zeros((4,), jnp.int32)
+    else:
+        hist = jnp.stack([jnp.sum(meta_codes == c) for c in range(4)])
     stats = (jnp.asarray(xs_over_s.size), clipped, jnp.asarray(e.size),
              sat_lo, sat_hi, hist)
-    jax.debug.callback(partial(drain_stats, site), stats)
+    jax.debug.callback(partial(drain_stats, site, codec), stats)
 
 
 # ---------------------------------------------------------------------------
@@ -137,102 +157,118 @@ def _leaf_paths(tree, is_leaf):
     return out
 
 
-def _stream_stats(codes: np.ndarray, scales: np.ndarray,
-                  meta: np.ndarray) -> dict:
+def _stream_stats(streams: dict, codec) -> dict:
     """Clip/saturation/meta stats straight from the packed u8 streams."""
+    codes = np.asarray(streams["codes"])
     nibs = np.concatenate([codes & 0xF, codes >> 4], axis=None)
     mags = nibs & 7
-    n = mags.size
-    hist = np.bincount((np.concatenate(
-        [(meta >> (2 * j)) & 0x3 for j in range(4)], axis=None)), minlength=4)
-    return {
-        "elems": int(n),
+    st = {
+        "elems": int(mags.size),
         "clip_rate": float(np.mean(mags == _FP4_TOP_CODE)),
-        "groups": int(scales.size),
-        "sat_low_rate": float(np.mean(scales <= E8M0_BYTE_LOW)),
-        "sat_high_rate": float(np.mean(scales >= E8M0_BYTE_HIGH)),
-        "meta_hist": hist.astype(int).tolist(),
     }
+    scales = np.asarray(streams.get("scales")) \
+        if "scales" in streams else None
+    if scales is not None and codec.scale_sat_bounds is not None:
+        lo, hi = codec.scale_sat_bounds
+        st["groups"] = int(scales.size)
+        st["sat_low_rate"] = float(np.mean(scales <= lo))
+        st["sat_high_rate"] = float(np.mean(scales >= hi))
+    else:
+        st["groups"] = int(scales.size) if scales is not None else 0
+        st["sat_low_rate"] = 0.0
+        st["sat_high_rate"] = 0.0
+    if codec.has_meta and "meta" in streams:
+        meta = np.asarray(streams["meta"])
+        st["meta_hist"] = np.bincount(np.concatenate(
+            [(meta >> (2 * j)) & 0x3 for j in range(4)], axis=None),
+            minlength=4).astype(int).tolist()
+    else:
+        st["meta_hist"] = [0, 0, 0, 0]
+    return st
 
 
-def _layer_drift(pw_cls, codes, scales, meta, shape) -> float:
+def _layer_drift(leaf) -> float:
     """Relative MSE between a decoded layer and its decode->repack->decode
-    round trip (Sg-EM idempotence; ~0 means the packed checkpoint is a
+    round trip (encoder idempotence; ~0 means the packed checkpoint is a
     fixed point of the encoder)."""
     import jax.numpy as jnp
     from repro.models.quant import decode_serving_weight, pack_serving_weight
-    w1 = decode_serving_weight(pw_cls(codes, scales, meta, shape))
-    w2 = decode_serving_weight(pack_serving_weight(w1.astype(jnp.float32)))
-    num = float(jnp.mean((w1.astype(jnp.float32) -
-                          w2.astype(jnp.float32)) ** 2))
-    den = float(jnp.mean(w1.astype(jnp.float32) ** 2)) + 1e-30
+    w1 = decode_serving_weight(leaf, dtype=jnp.float32)
+    w2 = decode_serving_weight(
+        pack_serving_weight(w1, leaf.codec), dtype=jnp.float32)
+    num = float(jnp.mean((w1 - w2) ** 2))
+    den = float(jnp.mean(w1 ** 2)) + 1e-30
     return num / den
 
 
 def weight_tree_health(tree, drift: bool = True) -> dict:
-    """Sweep every ``PackedWeight`` leaf of a packed parameter tree and
-    record per-layer gauges:
+    """Sweep every ``PackedTensor`` leaf of a packed parameter tree and
+    record per-layer gauges (labeled by the leaf's codec):
 
-      repro_quant_clip_rate{layer,kind="weight"}      FP4 top-code occupancy
-      repro_quant_scale_saturation_rate{layer,bound}  E8M0 bytes at 1 / 254
-      repro_quant_meta_fraction{layer,code}           2-bit mode histogram
-      repro_quant_reencode_drift{layer}               decode->repack rel. MSE
+      repro_quant_clip_rate{layer,codec,kind="weight"}  FP4 top-code occupancy
+      repro_quant_scale_saturation_rate{layer,codec,bound}  scale bytes at a
+                                                        representable bound
+      repro_quant_meta_fraction{layer,codec,code}       2-bit mode histogram
+      repro_quant_reencode_drift{layer,codec}           decode->repack rel. MSE
 
     Stacked (per-layer vmapped) leaves are reported per stacked index as
     ``<path>[i]``. Returns {layer: stats dict} (also useful standalone).
     Costs one decode (+ one repack when ``drift``) per layer — call it
     off the hot path (the serving engine does this once at startup)."""
-    from repro.models.quant import PackedWeight
+    from repro.core.codecs import PackedTensor, get_codec
+    from repro.models.quant import PackedWeight  # noqa: F401 (same class)
     report = {}
     leaves = _leaf_paths(
-        tree, is_leaf=lambda x: isinstance(x, PackedWeight))
+        tree, is_leaf=lambda x: isinstance(x, PackedTensor))
     for key, leaf in leaves:
-        if not isinstance(leaf, PackedWeight):
+        if not isinstance(leaf, PackedTensor):
             continue
-        codes = np.asarray(leaf.codes)
-        scales = np.asarray(leaf.scales)
-        meta = np.asarray(leaf.meta)
-        stacked = codes.ndim == len(leaf.shape) + 1
-        layers = range(codes.shape[0]) if stacked else (None,)
+        codec = get_codec(leaf.codec)
+        arrays = {name: np.asarray(s) for name, s in leaf.streams.items()}
+        stacked = arrays["codes"].ndim == len(leaf.shape) + 1
+        layers = range(arrays["codes"].shape[0]) if stacked else (None,)
         for i in layers:
             name = key if i is None else f"{key}[{i}]"
-            c, s, m = ((codes[i], scales[i], meta[i]) if stacked
-                       else (codes, scales, meta))
-            st = _stream_stats(c, s, m)
+            streams_i = ({n: a[i] for n, a in arrays.items()} if stacked
+                         else arrays)
+            st = _stream_stats(streams_i, codec)
+            st["codec"] = codec.name
             if drift:
-                st["reencode_drift"] = _layer_drift(
-                    PackedWeight, leaf.codes[i] if stacked else leaf.codes,
-                    leaf.scales[i] if stacked else leaf.scales,
-                    leaf.meta[i] if stacked else leaf.meta, leaf.shape)
+                st["reencode_drift"] = _layer_drift(PackedTensor(
+                    {n: (leaf.streams[n][i] if stacked else leaf.streams[n])
+                     for n in leaf.streams}, leaf.shape, leaf.codec))
             report[name] = st
             gauge("repro_quant_clip_rate",
                   "per-layer FP4 top-code occupancy of packed weights").set(
-                st["clip_rate"], layer=name, kind="weight")
+                st["clip_rate"], layer=name, codec=codec.name, kind="weight")
             gauge("repro_quant_scale_saturation_rate",
-                  "per-layer fraction of E8M0 scale bytes at a bound").set(
-                st["sat_low_rate"], layer=name, bound="low")
+                  "per-layer fraction of scale bytes at a bound").set(
+                st["sat_low_rate"], layer=name, codec=codec.name, bound="low")
             gauge("repro_quant_scale_saturation_rate", "").set(
-                st["sat_high_rate"], layer=name, bound="high")
+                st["sat_high_rate"], layer=name, codec=codec.name,
+                bound="high")
             total = max(1, sum(st["meta_hist"]))
             for code, cnt in enumerate(st["meta_hist"]):
                 gauge("repro_quant_meta_fraction",
                       "per-layer metadata-mode occupancy").set(
-                    cnt / total, layer=name, code=str(code))
+                    cnt / total, layer=name, codec=codec.name,
+                    code=str(code))
             if drift:
                 gauge("repro_quant_reencode_drift",
                       "per-layer decode->repack relative MSE").set(
-                    st["reencode_drift"], layer=name)
+                    st["reencode_drift"], layer=name, codec=codec.name)
     return report
 
 
-def act_reencode_drift(x) -> float:
-    """Relative MSE of one Elem-EM fake-quant round trip applied twice —
+def act_reencode_drift(x, fmt: str = "m2xfp") -> float:
+    """Relative MSE of one activation fake-quant round trip applied twice —
     the activation-side idempotence check (host helper, not a hot-path
     probe)."""
     import jax.numpy as jnp
-    from repro.core.m2xfp import quantize_act_m2xfp
-    q1 = quantize_act_m2xfp(jnp.asarray(x, jnp.float32))
-    q2 = quantize_act_m2xfp(q1)
+    from repro.core.codecs import get_codec
+    fq = get_codec(fmt).fake_quant_act
+    q1 = fq(jnp.asarray(x, jnp.float32))
+    q2 = fq(q1)
     num = float(jnp.mean((q1 - q2) ** 2))
     den = float(jnp.mean(q1 ** 2)) + 1e-30
     return num / den

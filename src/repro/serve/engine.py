@@ -1,14 +1,17 @@
-"""Batched autoregressive serving engine over packed M2XFP weight streams.
+"""Batched autoregressive serving engine over packed MX-family weights.
 
 The engine owns:
   * a packed parameter tree (``repro.serve.prequant`` / checkpoint load) —
-    every GEMM weight resident in HBM as u8 code/scale/meta streams,
-    4.5 bits/element, decoded inline by the quantized matmul (Pallas kernel
-    on TPU, XLA mirror on CPU — see repro.models.quant);
+    every GEMM weight resident in HBM as the codec-tagged u8 streams of
+    ``cfg.quant_format`` (any ``repro.core.codecs`` entry with an encoder:
+    m2xfp at 4.5 bits/element, mxfp4, nvfp4, ...), decoded inline by the
+    quantized matmul (codec Pallas kernel on TPU, XLA decode mirror
+    otherwise — see repro.models.quant);
   * a paged KV cache: ``init_caches(..., per_slot=True)`` — batch row b is
     request slot b, a fixed-size page of the cache pool with its own
     position track, admitted/evicted independently (continuous batching);
-    with ``cfg.kv_quant == 'm2xfp'`` pages hold packed Sg-EM streams;
+    with ``cfg.kv_quant`` set to a KV-capable codec pages hold its packed
+    streams (m2xfp: Sg-EM codes/scales/meta);
   * a host-side ``SlotScheduler`` deciding which request occupies which
     slot each step and how many tokens each slot consumes.
 

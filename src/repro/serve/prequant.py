@@ -1,11 +1,17 @@
-"""Offline prequantization: bf16 checkpoint -> packed M2XFP checkpoint.
+"""Offline prequantization: bf16 checkpoint -> packed codec checkpoint.
 
 The serving engine must never rematerialize weights in bf16 in HBM, so the
-bf16 -> Sg-EM conversion happens once, offline, and the *packed* streams
-(u8 codes + E8M0 scales + 2-bit meta, 4.5 bits/element) are what the
-checkpoint stores and what the engine loads. ``PackedWeight`` is a
-registered pytree, so the packed tree flows through ``repro.checkpoint``
-unchanged — leaves are keyed ``<path>/.codes`` / ``.scales`` / ``.meta``.
+bf16 -> packed conversion happens once, offline, with the codec named by
+``cfg.quant_format`` (m2xfp: u8 codes + E8M0 scales + 2-bit meta, 4.5
+bits/element), and the *packed* streams are what the checkpoint stores and
+what the engine loads. ``PackedTensor`` is a registered pytree, so the
+packed tree flows through ``repro.checkpoint`` unchanged — leaves are keyed
+``<path>/.codes`` / ``.scales`` / ... per stream.
+
+The manifest records the packed-format version AND the codec name;
+``load_packed_checkpoint`` refuses a checkpoint whose codec does not match
+``cfg.quant_format`` (the packed streams of different codecs are not
+interchangeable), with an actionable message.
 
     params  = init_params(key, cfg)                  # or restore_state(...)
     packed  = prequantize_params(params, cfg)
@@ -31,7 +37,11 @@ __all__ = [
     "load_packed_checkpoint", "prequantize_checkpoint",
 ]
 
-_PACKED_TAG = "m2xfp-packed-v1"
+# v1 predates the codec registry and implies codec="m2xfp"; v2 records the
+# codec explicitly in the manifest.
+_PACKED_TAG = "mx-packed"
+_PACKED_VERSION = 2
+_LEGACY_TAG = "m2xfp-packed-v1"
 
 
 def _serve_cfg(cfg):
@@ -40,8 +50,9 @@ def _serve_cfg(cfg):
 
 
 def prequantize_params(params: dict, cfg) -> dict:
-    """Dense param tree -> packed M2XFP tree (every GEMM weight becomes a
-    ``PackedWeight``; embeddings / norms / recurrence params stay bf16)."""
+    """Dense param tree -> packed tree in ``cfg.quant_format`` (every GEMM
+    weight becomes a codec-tagged ``PackedTensor``; embeddings / norms /
+    recurrence params stay bf16)."""
     return pack_params_for_serving(params, _serve_cfg(cfg))
 
 
@@ -61,7 +72,8 @@ def save_packed_checkpoint(ckpt_dir: str, packed: dict, cfg,
                            keep: int = 3) -> str:
     """Atomic save of a packed tree via repro.checkpoint. Returns the
     checkpoint directory."""
-    meta = {"format": _PACKED_TAG, "model": cfg.name}
+    meta = {"format": _PACKED_TAG, "format_version": _PACKED_VERSION,
+            "codec": cfg.quant_format, "model": cfg.name}
     meta.update(extra or {})
     return save_state(ckpt_dir, step, packed, extra=meta, keep=keep)
 
@@ -70,12 +82,30 @@ def load_packed_checkpoint(ckpt_dir: str, cfg,
                            step: Optional[int] = None,
                            shardings=None) -> Tuple[dict, dict]:
     """Restore a packed tree. Returns (packed, manifest_extra); raises if
-    the checkpoint was not written by ``save_packed_checkpoint``."""
-    tag = read_manifest(ckpt_dir, step).get("extra", {}).get("format")
-    if tag != _PACKED_TAG:
+    the checkpoint was not written by ``save_packed_checkpoint`` or was
+    packed with a different codec than ``cfg.quant_format``."""
+    extra = read_manifest(ckpt_dir, step).get("extra", {})
+    tag = extra.get("format")
+    if tag == _LEGACY_TAG:
+        codec = "m2xfp"                    # v1 manifests predate the field
+    elif tag == _PACKED_TAG:
+        codec = extra.get("codec")
+        if codec is None:
+            raise ValueError(
+                f"{ckpt_dir} is a packed checkpoint (format={tag!r} "
+                f"v{extra.get('format_version')}) but its manifest records "
+                f"no codec; re-run prequantize_checkpoint to rewrite it")
+    else:
         raise ValueError(
-            f"{ckpt_dir} is not a packed M2XFP checkpoint "
-            f"(format={tag!r}); run prequantize_checkpoint first")
+            f"{ckpt_dir} is not a packed checkpoint (format={tag!r}); "
+            f"run prequantize_checkpoint first")
+    if codec != cfg.quant_format:
+        raise ValueError(
+            f"{ckpt_dir} was packed with codec {codec!r} but "
+            f"cfg.quant_format={cfg.quant_format!r}; packed streams are "
+            f"not interchangeable between codecs — load with a matching "
+            f"config (dataclasses.replace(cfg, quant_format={codec!r})) "
+            f"or re-run prequantize_checkpoint with this one")
     return restore_state(ckpt_dir, packed_template(cfg), step, shardings)
 
 

@@ -1,0 +1,165 @@
+"""Codec registry tests: lookup/error contract, round-trip parity of every
+packed codec against its fake-quant reference, PackedTensor pytree
+behavior, and the EBW accounting of the packed streams."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.codecs import (
+    Codec, PackedTensor, get_codec, kernel_codecs, kv_codecs, list_codecs,
+    packed_codecs, register_codec,
+)
+from repro.models.quant import (
+    decode_serving_weight, fake_quant_act, fake_quant_weight,
+    pack_serving_weight,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_every_paper_format():
+    names = list_codecs()
+    for fmt in ("m2xfp", "m2nvfp4", "mxfp4", "nvfp4", "smx4", "fp4",
+                "m2xfp_ideal6"):
+        assert fmt in names
+    assert names == tuple(sorted(names))
+    # subsets are consistent
+    assert set(packed_codecs()) <= set(names)
+    assert set(kernel_codecs()) <= set(packed_codecs())
+    assert set(kv_codecs()) <= set(names)
+    assert "nvfp4" in packed_codecs()
+    assert "nvfp4" not in kernel_codecs()    # serves via the XLA mirror
+    assert "nvfp4" not in kv_codecs()        # per-call tensor scale
+    # the per-tensor activation scale also breaks launch-shape invariance
+    assert not get_codec("nvfp4").act_batch_invariant
+    assert get_codec("m2xfp").act_batch_invariant
+    assert get_codec("mxfp4").act_batch_invariant
+
+
+def test_unknown_codec_error_lists_registry():
+    with pytest.raises(ValueError, match="unknown codec 'int3'"):
+        get_codec("int3")
+    with pytest.raises(ValueError, match="m2xfp"):
+        get_codec("int3")                    # message names the options
+
+
+def test_fake_quant_rejects_unknown_format():
+    w = jnp.ones((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="unknown codec"):
+        fake_quant_weight(w, "bogus")
+    with pytest.raises(ValueError, match="unknown codec"):
+        fake_quant_act(w, "bogus")
+
+
+def test_pack_rejects_unpackable_codec():
+    w = jnp.ones((32, 32), jnp.float32)
+    with pytest.raises(ValueError, match="smx4"):
+        pack_serving_weight(w, "smx4")       # fake-quant only, no streams
+
+
+def test_kv_rejects_non_kv_codec():
+    from repro.models.kvquant import kv_codec
+    with pytest.raises(ValueError, match="no packed KV-cache path"):
+        kv_codec("nvfp4")
+    with pytest.raises(ValueError, match="unknown codec"):
+        kv_codec("bogus")
+
+
+def test_register_codec_rejects_duplicates_and_accepts_toys():
+    fq = lambda x: x
+    toy = Codec(name="test-toy", group=32, ebw=4.0,
+                fake_quant_weight=fq, fake_quant_act=fq)
+    register_codec(toy)
+    try:
+        assert "test-toy" in list_codecs()
+        assert not get_codec("test-toy").packed
+        with pytest.raises(ValueError, match="already registered"):
+            register_codec(toy)
+        register_codec(toy, overwrite=True)  # explicit overwrite allowed
+    finally:
+        from repro.core import codecs as _c
+        _c._REGISTRY.pop("test-toy", None)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip parity: decode(encode(w)) == fake_quant(w), bit-exact, for
+# every codec that can be packed (the serve path's core invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.parametrize("fmt", packed_codecs())
+def test_packed_roundtrip_matches_fake_quant(fmt):
+    w = jax.random.normal(KEY, (64, 128), jnp.float32) * 3.0
+    p = pack_serving_weight(w, fmt)
+    assert isinstance(p, PackedTensor) and p.codec == fmt
+    dec = decode_serving_weight(p, dtype=jnp.float32)
+    ref = fake_quant_weight(w, fmt).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(ref))
+
+
+@pytest.mark.parametrize("fmt", packed_codecs())
+def test_packed_roundtrip_edge_values(fmt):
+    """Zeros, tiny denormals and huge groups survive the scale guards."""
+    w = np.zeros((64, 128), np.float32)
+    w[0, :] = 1e-30                          # underflowing group
+    w[32, :] = 3e4                           # near-saturating group
+    w[33, 1] = -7.0
+    p = pack_serving_weight(jnp.asarray(w), fmt)
+    dec = decode_serving_weight(p, dtype=jnp.float32)
+    ref = fake_quant_weight(jnp.asarray(w), fmt).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(ref))
+
+
+@pytest.mark.parametrize("fmt", packed_codecs())
+def test_packed_stream_footprint_matches_ebw(fmt):
+    """Stream bytes per element == the codec's advertised EBW (tscale's
+    per-tensor 4 bytes amortize to ~0 and are excluded)."""
+    k, n = 128, 256
+    p = pack_serving_weight(jax.random.normal(KEY, (k, n), jnp.float32), fmt)
+    nbytes = sum(v.size * v.dtype.itemsize
+                 for name, v in p.streams.items() if name != "tscale")
+    assert 8 * nbytes / (k * n) == pytest.approx(get_codec(fmt).ebw)
+
+
+# ---------------------------------------------------------------------------
+# PackedTensor pytree behavior
+# ---------------------------------------------------------------------------
+
+def test_packed_tensor_pytree_roundtrip_and_vmap():
+    ws = jax.random.normal(KEY, (3, 64, 128), jnp.float32)
+    for fmt in packed_codecs():
+        stacked = jax.vmap(lambda w: pack_serving_weight(w, fmt))(ws)
+        assert isinstance(stacked, PackedTensor)
+        assert stacked.codec == fmt and stacked.shape == (64, 128)
+        # flatten/unflatten preserves streams, shape and codec tag
+        leaves, tdef = jax.tree_util.tree_flatten(stacked)
+        back = jax.tree_util.tree_unflatten(tdef, leaves)
+        assert back.codec == fmt and back.shape == stacked.shape
+        # per-layer slices decode to the per-layer pack
+        one = pack_serving_weight(ws[1], fmt)
+        for name in one.streams:
+            np.testing.assert_array_equal(np.asarray(stacked.streams[name][1]),
+                                          np.asarray(one.streams[name]))
+
+
+def test_packed_tensor_keyed_paths_name_streams():
+    p = pack_serving_weight(jnp.ones((32, 128), jnp.float32), "m2xfp")
+    flat = jax.tree_util.tree_flatten_with_path(p)[0]
+    names = {path[-1].name for path, _ in flat}
+    assert names == {"codes", "scales", "meta"}
+
+
+def test_decode_dtype_per_codec():
+    w = jax.random.normal(KEY, (64, 128), jnp.float32)
+    assert decode_serving_weight(
+        pack_serving_weight(w, "m2xfp")).dtype == jnp.bfloat16
+    # nvfp4's e4m3 x f32 scale product is not bf16-representable
+    assert decode_serving_weight(
+        pack_serving_weight(w, "nvfp4")).dtype == jnp.float32

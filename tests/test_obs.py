@@ -178,7 +178,8 @@ def test_weight_tree_health_report(monkeypatch):
     assert sum(st["meta_hist"]) == 4 * st["groups"]
     assert st["reencode_drift"] < 1e-3           # Sg-EM ~idempotent
     g = obs.gauge("repro_quant_clip_rate")
-    assert g.value(layer="layer0", kind="weight") == st["clip_rate"]
+    assert g.value(layer="layer0", codec="m2xfp",
+                   kind="weight") == st["clip_rate"]
 
 
 def test_act_reencode_drift_small():
@@ -214,8 +215,10 @@ def test_engine_emits_metrics_and_trace(monkeypatch, tmp_path):
     assert "repro_serve_steps_total" in text
     assert "repro_serve_occupancy" in text
     # acceptance: per-layer clip rate + online site health
-    assert 'repro_quant_clip_rate{kind="online",site="serve_gemm"}' in text
-    assert 'repro_quant_clip_rate{kind="online",site="kv_encode"}' in text
+    assert ('repro_quant_clip_rate{codec="m2xfp",kind="online",'
+            'site="serve_gemm"}' in text)
+    assert ('repro_quant_clip_rate{codec="m2xfp",kind="online",'
+            'site="kv_encode"}' in text)
     assert 'kind="weight"' in text
     assert "repro_quant_reencode_drift" in text
     assert "repro_quant_meta_total" in text

@@ -47,7 +47,8 @@ def test_packed_checkpoint_roundtrip_bitexact(packed_model, tmp_path):
     cfg, _, packed = packed_model
     save_packed_checkpoint(str(tmp_path), packed, cfg)
     packed2, extra = load_packed_checkpoint(str(tmp_path), cfg)
-    assert extra["format"] == "m2xfp-packed-v1"
+    assert extra["format"] == "mx-packed"
+    assert extra["codec"] == "m2xfp"
     flat1 = jax.tree_util.tree_leaves(packed)
     flat2 = jax.tree_util.tree_leaves(packed2)
     assert len(flat1) == len(flat2)
@@ -74,6 +75,82 @@ def test_load_rejects_dense_checkpoint(packed_model, tmp_path):
     save_state(str(tmp_path), 0, params)
     with pytest.raises(ValueError, match="not a packed"):
         load_packed_checkpoint(str(tmp_path), cfg)
+
+
+def test_load_rejects_codec_mismatch(packed_model, tmp_path):
+    """A checkpoint packed as m2xfp must not restore under a config that
+    expects different streams — the error names both codecs."""
+    cfg, _, packed = packed_model
+    save_packed_checkpoint(str(tmp_path), packed, cfg)
+    other = dataclasses.replace(cfg, quant_format="mxfp4")
+    with pytest.raises(ValueError, match="codec 'm2xfp'.*'mxfp4'"):
+        load_packed_checkpoint(str(tmp_path), other)
+
+
+def test_load_rejects_manifest_without_codec(packed_model, tmp_path):
+    """A v2 manifest that lost its codec field fails actionably instead of
+    guessing."""
+    cfg, _, packed = packed_model
+    from repro.checkpoint import save_state
+    save_state(str(tmp_path), 0, packed,
+               extra={"format": "mx-packed", "format_version": 2})
+    with pytest.raises(ValueError, match="records no codec"):
+        load_packed_checkpoint(str(tmp_path), cfg)
+
+
+@pytest.mark.parametrize("fmt", ["mxfp4", "nvfp4"])
+def test_engine_serves_packed_checkpoint_any_codec(packed_model, tmp_path,
+                                                   fmt):
+    """End-to-end per codec: prequantize -> save -> load -> generate. The
+    engine never sees a dense weight and the loaded tree is codec-tagged."""
+    cfg, params, _ = packed_model
+    fcfg = dataclasses.replace(cfg, quant_format=fmt)
+    save_packed_checkpoint(str(tmp_path), prequantize_params(params, fcfg),
+                           fcfg)
+    packed, extra = load_packed_checkpoint(str(tmp_path), fcfg)
+    assert extra["codec"] == fmt
+    leaves = [l for l in jax.tree.leaves(
+        packed, is_leaf=lambda x: isinstance(x, PackedWeight))
+        if isinstance(l, PackedWeight)]
+    assert leaves and all(l.codec == fmt for l in leaves)
+    eng = ServeEngine(packed, fcfg, n_slots=1, max_len=16)
+    out = eng.generate([[5, 6, 7]], max_new_tokens=2)
+    assert len(out[0]) == 2 and all(0 <= t < cfg.vocab_size for t in out[0])
+
+
+# ---------------------------------------------------------------------------
+# Golden tokens: the m2xfp serve path is pinned bit-exactly
+# ---------------------------------------------------------------------------
+
+_GOLDEN_PROMPTS = [[94, 94, 95, 36, 16],
+                   [89, 10, 25, 13, 30, 51, 11, 77, 23],
+                   [76, 30, 76]]
+# captured from the pre-codec-registry serve path (PRNGKey(0) params,
+# n_slots=2, max_len=32, prefill_chunk=4, greedy, 6 new tokens) — any
+# change to these tokens is a numerics regression in the packed m2xfp
+# pipeline, not a refactor
+_GOLDEN_M2XFP = [[90, 70, 70, 86, 68, 68],
+                 [45, 96, 34, 11, 96, 64],
+                 [41, 41, 30, 93, 41, 41]]
+_GOLDEN_M2XFP_KVQ = [[90, 6, 38, 86, 6, 29],
+                     [45, 96, 64, 64, 75, 3],
+                     [30, 5, 64, 39, 39, 5]]
+
+
+@pytest.mark.smoke
+def test_golden_tokens_m2xfp(packed_model):
+    cfg, _, packed = packed_model
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32, prefill_chunk=4)
+    assert eng.generate(_GOLDEN_PROMPTS, max_new_tokens=6) == _GOLDEN_M2XFP
+
+
+def test_golden_tokens_m2xfp_quantized_kv(packed_model):
+    cfg, params, _ = packed_model
+    qcfg = dataclasses.replace(cfg, kv_quant="m2xfp")
+    packed = prequantize_params(params, qcfg)
+    eng = ServeEngine(packed, qcfg, n_slots=2, max_len=32, prefill_chunk=4)
+    assert eng.generate(_GOLDEN_PROMPTS,
+                        max_new_tokens=6) == _GOLDEN_M2XFP_KVQ
 
 
 # ---------------------------------------------------------------------------
