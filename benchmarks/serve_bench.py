@@ -18,6 +18,15 @@ mxfp4, nvfp4, ...), all on the SAME traffic trace:
     PYTHONPATH=src python benchmarks/serve_bench.py --tokens 16
     PYTHONPATH=src python benchmarks/serve_bench.py \
         --fmt m2xfp mxfp4 nvfp4      # per-format tok/s on one trace
+
+``--chaos`` switches to the fault-injection drill (docs/robustness.md):
+the same traffic runs under a seeded fault plan — a bit-flip in one
+slot's packed KV page, a NaN logit row, a transient launch failure and a
+watchdog-tripping delay — and the run reports recovery metrics
+(quarantines, retries, steps in DEGRADED) and FAILS (exit 1) if the
+engine dies or nothing completes:
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --chaos --kv-quant
 """
 from __future__ import annotations
 
@@ -146,6 +155,59 @@ def bench_format(fmt: str, args, params, prompts) -> dict:
     }
 
 
+def bench_chaos(args, params, prompts) -> int:
+    """Fault-injection drill: run the trace under a seeded fault plan and
+    report recovery. Returns a process exit code (0 = engine survived and
+    completed work, 1 = containment failed)."""
+    from repro.serve import GuardConfig
+    from repro.serve.guard import FAILED
+    from repro.testing import FaultInjector, chaos_plan
+
+    fmt = args.fmt[0]
+    cfg = build_cfg(args, fmt)
+    packed = prequantize_params(params, cfg)
+    guard = GuardConfig(retry_backoff_s=0.01, seed=args.chaos_seed)
+    eng = ServeEngine(packed, cfg, n_slots=args.slots, max_len=args.max_len,
+                      prefill_chunk=args.prefill_chunk,
+                      prefill_budget=args.prefill_budget, guard=guard,
+                      max_queue=4 * args.slots, verify_weights=True,
+                      source_params=params)
+
+    # warm the jit caches BEFORE arming the watchdog or the faults: the
+    # first launches include multi-second compilation, which would trip
+    # any sane per-step budget
+    eng.generate([prompts[0]], max_new_tokens=2)
+    guard.watchdog_s = args.chaos_watchdog_s
+
+    # faults land early in the run so short traces still see all of them
+    plan = chaos_plan(args.chaos_seed, args.slots,
+                      first_step=eng.stats.steps + 2,
+                      horizon=max(8, args.tokens),
+                      delay_s=2 * args.chaos_watchdog_s)
+    print(f"[chaos:{fmt}] {plan.describe()}")
+    reqs = [eng.submit(p, args.tokens) for p in prompts]
+    with FaultInjector(eng, plan) as inj:
+        eng.run()
+
+    done = sum(1 for r in reqs if r.state == "finished")
+    g = eng.guard_summary()
+    print(f"[chaos:{fmt}] injected {len(inj.fired)} fault(s) "
+          f"{sorted(inj.fired)}; {done}/{len(reqs)} requests completed, "
+          f"{g['quarantines']} quarantined, {g['retries']} retries, "
+          f"{g['watchdog_trips']} watchdog trips")
+    print(f"[chaos:{fmt}] health={g['state']} "
+          f"(degraded for {g['degraded_steps']} of {eng.stats.steps} "
+          f"steps); shed={g['shed']} expired={g['expired']}")
+    if g["state"] == FAILED:
+        print(f"[chaos:{fmt}] FAIL: engine died ({g['fail_reason']})")
+        return 1
+    if done == 0:
+        print(f"[chaos:{fmt}] FAIL: nothing completed under injection")
+        return 1
+    print(f"[chaos:{fmt}] PASS: faults contained, engine never FAILED")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fmt", nargs="+", default=["m2xfp"],
@@ -169,6 +231,14 @@ def main():
                     help="enable REPRO_OBS and drop metrics.jsonl / "
                          "trace.json / serve_stats.json under DIR "
                          "(docs/observability.md)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the seeded fault-injection drill instead of "
+                         "the throughput bench (exit 1 if the engine fails "
+                         "to contain the faults)")
+    ap.add_argument("--chaos-seed", type=int, default=7,
+                    help="fault-plan seed (same seed = same fault schedule)")
+    ap.add_argument("--chaos-watchdog-s", type=float, default=5.0,
+                    help="per-launch watchdog budget during --chaos")
     args = ap.parse_args()
 
     if args.obs_out:
@@ -182,6 +252,9 @@ def main():
                         args.requests)
     prompts = [list(map(int, rng.integers(0, 4096, n))) for n in lens]
     params = init_params(jax.random.PRNGKey(0), build_cfg(args, "m2xfp"))
+
+    if args.chaos:
+        return bench_chaos(args, params, prompts)
 
     rows = [bench_format(fmt, args, params, prompts) for fmt in args.fmt]
     if len(rows) > 1:

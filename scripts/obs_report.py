@@ -97,6 +97,8 @@ def report_metrics(recs: dict, top: int) -> list[str]:
                          f"count={n} mean={mean:.4g} {qtxt}")
         lines.append("")
 
+    lines += report_health(recs)
+
     clip = [r for (name, _), r in sorted(recs.items())
             if name == "repro_quant_clip_rate"
             and r["labels"].get("kind") == "weight"]
@@ -107,6 +109,30 @@ def report_metrics(recs: dict, top: int) -> list[str]:
             lines.append(f"  {rec['labels'].get('layer', '?'):40s} "
                          f"clip_rate={rec['value']:.3e}")
         lines.append("")
+    return lines
+
+
+_HEALTH_NAMES = {0: "HEALTHY", 1: "DEGRADED", 2: "FAILED"}
+
+
+def report_health(recs: dict) -> list[str]:
+    """Serving-health section: the guard's state machine and fault
+    counters (repro_guard_*, docs/robustness.md). Silent when the engine
+    ran unguarded."""
+    guard = [r for (name, _), r in sorted(recs.items())
+             if name.startswith("repro_guard_")]
+    if not guard:
+        return []
+    lines = ["== serving health (repro_guard_*) =="]
+    for rec in guard:
+        val = rec["value"]
+        if rec["name"] == "repro_guard_health_state":
+            state = _HEALTH_NAMES.get(int(val), "?")
+            lines.append(f"  health state = {state} ({val:g})")
+        else:
+            short = rec["name"][len("repro_guard_"):]
+            lines.append(f"  {short}{fmt_labels(rec['labels'])} = {val:g}")
+    lines.append("")
     return lines
 
 

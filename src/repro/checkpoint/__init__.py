@@ -1,3 +1,4 @@
 from .checkpoint import (  # noqa: F401
-    CheckpointManager, latest_step, read_manifest, restore_state, save_state,
+    CheckpointCorruptError, CheckpointManager, all_steps, latest_step,
+    leaf_crc32, read_manifest, restore_state, save_state,
 )

@@ -26,15 +26,37 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 __all__ = ["save_state", "restore_state", "read_manifest", "latest_step",
-           "CheckpointManager"]
+           "all_steps", "CheckpointManager", "CheckpointCorruptError",
+           "leaf_crc32"]
 
 _MANIFEST = "manifest.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint's on-disk bytes are damaged (truncation, bit flip, bad
+    media). ``leaf`` names the first array that failed to read or verify
+    when that is determinable, else None (e.g. the npz container itself is
+    unreadable). The message always says what to do next: restore an older
+    step or re-write the checkpoint from source."""
+
+    def __init__(self, message: str, leaf: Optional[str] = None,
+                 ckpt_dir: Optional[str] = None):
+        super().__init__(message)
+        self.leaf = leaf
+        self.ckpt_dir = ckpt_dir
+
+
+def leaf_crc32(arr: np.ndarray) -> int:
+    """CRC-32 of an array's raw bytes (dtype-agnostic: extension dtypes
+    like bfloat16 hash the same bytes the npz stores)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _flatten(state):
@@ -70,7 +92,8 @@ def _save_state(ckpt_dir, step, state, extra, keep) -> str:
         arr = np.asarray(jax.device_get(leaf))
         arrays[key.replace("/", "|")] = arr
         manifest["leaves"][key] = {
-            "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": leaf_crc32(arr)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
@@ -115,25 +138,42 @@ def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
 
 
 def restore_state(ckpt_dir: str, template, step: Optional[int] = None,
-                  shardings=None):
+                  shardings=None, verify: bool = True):
     """Restore into the structure of ``template`` (a state pytree or its
     eval_shape). ``shardings``: optional matching tree of NamedShardings —
     arrays are placed (and re-sharded if the mesh changed) on load.
-    Returns (state, manifest_extra)."""
+    ``verify``: check every leaf's bytes against the CRC-32 the manifest
+    recorded at save time (one hash pass per leaf; checkpoints written
+    before CRCs existed load unverified). Returns (state, manifest_extra).
+
+    Raises :class:`CheckpointCorruptError` — naming the bad leaf whenever
+    the container is readable enough to know it — when the npz is
+    truncated/unreadable, a leaf is missing, or a leaf fails CRC."""
     from repro.obs import span
     with span("checkpoint.restore", cat="ckpt", dir=ckpt_dir,
               step=-1 if step is None else step):
-        return _restore_state(ckpt_dir, template, step, shardings)
+        return _restore_state(ckpt_dir, template, step, shardings, verify)
 
 
-def _restore_state(ckpt_dir, template, step=None, shardings=None):
+_REMEDY = ("the checkpoint bytes are damaged — restore an older step "
+           "(repro.checkpoint.all_steps) or re-write it from source")
+
+
+def _restore_state(ckpt_dir, template, step=None, shardings=None,
+                   verify=True):
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(d, _MANIFEST)) as f:
         manifest = json.load(f)
-    npz = np.load(os.path.join(d, "arrays.npz"))
+    npz_path = os.path.join(d, "arrays.npz")
+    try:
+        npz = np.load(npz_path)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"{npz_path} is unreadable ({type(e).__name__}: {e}); "
+            f"{_REMEDY}", ckpt_dir=ckpt_dir) from e
 
     flat_t = jax.tree_util.tree_flatten_with_path(template)[0]
     tdef = jax.tree_util.tree_structure(template)
@@ -143,7 +183,26 @@ def _restore_state(ckpt_dir, template, step=None, shardings=None):
     for i, (path, leaf) in enumerate(flat_t):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
-        arr = npz[key.replace("/", "|")]
+        try:
+            arr = npz[key.replace("/", "|")]
+        except KeyError:
+            raise CheckpointCorruptError(
+                f"{npz_path} holds no array for leaf {key!r}; {_REMEDY}",
+                leaf=key, ckpt_dir=ckpt_dir) from None
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"leaf {key!r} of {npz_path} failed to read "
+                f"({type(e).__name__}: {e}); {_REMEDY}",
+                leaf=key, ckpt_dir=ckpt_dir) from e
+        want_crc = manifest["leaves"].get(key, {}).get("crc32")
+        if verify and want_crc is not None:
+            got_crc = leaf_crc32(arr)
+            if got_crc != want_crc:
+                raise CheckpointCorruptError(
+                    f"leaf {key!r} of {npz_path} failed CRC-32 "
+                    f"verification (manifest 0x{want_crc:08x}, on disk "
+                    f"0x{got_crc:08x}); {_REMEDY}",
+                    leaf=key, ckpt_dir=ckpt_dir)
         if arr.dtype.kind == "V":
             # npz stores extension dtypes (bfloat16, float8_*) as raw void
             # bytes; the manifest remembers the real dtype — view it back

@@ -57,7 +57,8 @@ from .scaling import e8m0_decode, e8m0_encode, shared_scale_exponent
 
 __all__ = [
     "Codec", "PackedTensor", "register_codec", "get_codec", "list_codecs",
-    "packed_codecs", "kv_codecs", "kernel_codecs",
+    "packed_codecs", "kv_codecs", "kernel_codecs", "validate_packed",
+    "validate_packed_tree",
 ]
 
 GROUP = 32
@@ -197,6 +198,82 @@ class PackedTensor:
     def __repr__(self):
         return (f"PackedTensor(codec={self.codec!r}, shape={self.shape}, "
                 f"streams={list(self.streams)})")
+
+
+# ---------------------------------------------------------------------------
+# Packed-stream integrity validation
+# ---------------------------------------------------------------------------
+
+def validate_packed(p: PackedTensor) -> list:
+    """Integrity-check one packed tensor's streams against the encoder
+    invariants of its codec. Returns a list of human-readable problems
+    (empty list = valid).
+
+    Checks (per the OCP Microscaling spec and this repo's encoders):
+      * E8M0 scale bytes must lie in [1, 254] — ``repro.core.scaling``
+        clamps exponents to [-126, 127], so byte 0 (2^-127, never emitted)
+        and byte 255 (reserved/NaN; decodes to inf) cannot be produced by
+        any encoder. A byte outside the range means the stream was
+        corrupted after packing (bit flip, truncated read, bad DMA).
+      * E4M3 scale bytes must not be a NaN encoding (0x7F / 0xFF).
+      * Float per-tensor scalars (nvfp4's ``tscale``) must be finite.
+      * The code stream must hold exactly two nibbles per logical element.
+    """
+    import numpy as np
+    codec = get_codec(p.codec)
+    problems = []
+    if not codec.packed:
+        return [f"codec {p.codec!r} has no packed path"]
+    streams = {name: np.asarray(s) for name, s in p.streams.items()}
+    sc = streams.get("scales")
+    if sc is not None and sc.dtype == np.uint8:
+        if codec.scale_kind == "e8m0":
+            bad = (sc < 1) | (sc > 254)
+            legal = "[1, 254]"
+        elif codec.scale_kind == "e4m3":
+            bad = (sc & 0x7F) == 0x7F
+            legal = "any non-NaN e4m3 byte"
+        else:  # pragma: no cover - no u8-scaled codec with another kind yet
+            bad, legal = None, ""
+        if bad is not None and bad.any():
+            idx = np.argwhere(bad)[0]
+            problems.append(
+                f"{int(bad.sum())} scale byte(s) outside the legal "
+                f"{codec.scale_kind} range {legal} (first at index "
+                f"{tuple(int(i) for i in idx)}, byte "
+                f"{int(sc[tuple(idx)])})")
+    for name, s in streams.items():
+        if np.issubdtype(s.dtype, np.floating) and not np.isfinite(
+                np.asarray(s, np.float32)).all():
+            problems.append(f"non-finite value in float stream {name!r}")
+    codes = streams.get("codes")
+    if codes is not None:
+        import math as _math
+        n_elems = _math.prod(p.shape)
+        if n_elems and (2 * codes.size) % n_elems != 0:
+            problems.append(
+                f"code stream holds {2 * codes.size} nibbles, not a "
+                f"multiple of the {n_elems} logical elements of shape "
+                f"{p.shape}")
+    return problems
+
+
+def validate_packed_tree(tree) -> dict:
+    """Run :func:`validate_packed` over every ``PackedTensor`` leaf of a
+    parameter tree. Returns {leaf path: [problems]} for invalid leaves only
+    (empty dict = every packed stream is intact)."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, PackedTensor))[0]
+    report = {}
+    for path, leaf in flat:
+        if not isinstance(leaf, PackedTensor):
+            continue
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        problems = validate_packed(leaf)
+        if problems:
+            report[key] = problems
+    return report
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,10 @@ from repro import obs
 from repro.models import model as _model
 from repro.models.model import decode_step, init_caches
 
-from .scheduler import Request, SlotScheduler
+from . import guard as _guard
+from .guard import (EngineFailedError, EngineGuard, GuardConfig,
+                    TransientStepError)
+from .scheduler import AdmissionError, Request, SlotScheduler
 
 # TTFT is quantized in engine steps; buckets cover 1..256-step prompts
 _TTFT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -74,6 +77,9 @@ class ServeStats:
     wall_s: float = 0.0
     prefill_wall_s: float = 0.0    # wall attributed to prefill launches
     decode_wall_s: float = 0.0     # wall attributed to pure decode launches
+    quarantined: int = 0           # requests evicted for poisoned state
+    expired: int = 0               # requests past their deadline
+    shed: int = 0                  # requests rejected at admission
 
     @property
     def tokens_per_sec(self) -> float:
@@ -118,14 +124,21 @@ def _greedy(logits: np.ndarray) -> np.ndarray:
     return np.argmax(logits, axis=-1).astype(np.int32)
 
 
-def _reset_slot(caches: dict, slot: jax.Array) -> dict:
+def _reset_slot(caches: dict, slot: jax.Array, scrub: bool = False) -> dict:
     """Return ``caches`` with one slot's rows back in their init state.
 
     Every cache leaf is layer-stacked with the slot (batch) axis second.
-    Attention K/V pages need no scrub — setting the slot's position track
-    to -1 masks every stale entry (``attention_decode``'s valid test), so
-    only the position rows and the recurrent-state rows are written.
-    ``m`` is the mlstm/slstm running log-max, initialized to -1e30."""
+    For a normal admit-time reset attention K/V pages need no scrub —
+    setting the slot's position track to -1 masks every stale entry
+    (``attention_decode``'s valid test), so only the position rows and the
+    recurrent-state rows are written. ``m`` is the mlstm/slstm running
+    log-max, initialized to -1e30.
+
+    ``scrub=True`` (quarantine path) additionally zeroes the slot's K/V
+    pages and packed-KV streams: a poisoned page (NaN float, reserved
+    scale byte 255) would re-trip the KV sentinel every subsequent step if
+    left masked-but-resident. Zero is the init state of every page stream
+    (packed-KV scale byte 0 = empty page)."""
     def fix(path, leaf):
         keys = [str(getattr(p, "key", "")) for p in path]
         name = keys[-1] if keys else ""
@@ -134,6 +147,8 @@ def _reset_slot(caches: dict, slot: jax.Array) -> dict:
         if any(k in ("mlstm", "slstm", "mamba") for k in keys):
             fill = -1e30 if name == "m" else 0.0
             return leaf.at[:, slot].set(jnp.asarray(fill, leaf.dtype))
+        if scrub:
+            return leaf.at[:, slot].set(jnp.zeros((), leaf.dtype))
         return leaf                        # K/V pages: masked via pos
     return jax.tree_util.tree_map_with_path(fix, caches)
 
@@ -158,12 +173,29 @@ class ServeEngine:
     prefill_budget : cap on total prefill tokens per step across all slots
         (None = unlimited) so prefill-heavy traffic cannot starve decoding
         slots; the oldest prefilling request always progresses.
+    guard : fault-tolerance config (``repro.serve.guard.GuardConfig``).
+        None (default) = guard on with default knobs: NaN/poison sentinels
+        traced into the launches, poisoned-slot quarantine, transient-step
+        retries, health state machine. ``False`` = guard fully off — the
+        launch graphs are byte-identical to the pre-guard engine.
+    max_queue : bound on the admission queue (None = unbounded); a full
+        queue sheds submissions with ``AdmissionError`` (backpressure).
+    default_ttl_steps : deadline in engine steps applied to every request
+        that does not carry its own ``ttl_steps`` (None = no deadline).
+    verify_weights : run codec stream validation over the packed params at
+        init, repairing broken leaves (re-quantize from ``source_params``
+        when given, else clamp scales — see guard.verify_packed_tree).
+    source_params : optional dense parameter tree enabling exact
+        re-quantization repair of corrupt packed leaves.
     """
 
     def __init__(self, params, cfg, n_slots: int = 8, max_len: int = 256,
                  sample_fn: Optional[Callable] = None,
                  prefill_chunk: int = 8,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 guard=None, max_queue: Optional[int] = None,
+                 default_ttl_steps: Optional[int] = None,
+                 verify_weights: bool = False, source_params=None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -173,8 +205,27 @@ class ServeEngine:
         if cfg.family in ("ssm", "hybrid"):
             self.chunk = 1           # recurrent state updates token by token
         self.prefill_budget = prefill_budget
-        self.scheduler = SlotScheduler(n_slots)
+        if guard is False:
+            gcfg = None
+        else:
+            gcfg = guard if isinstance(guard, GuardConfig) else GuardConfig()
+        self.guard: Optional[EngineGuard] = \
+            EngineGuard(gcfg) if gcfg is not None else None
+        self.default_ttl_steps = default_ttl_steps
+        self.source_params = source_params
+        # sliding-window configs accept prompts longer than the page
+        self.scheduler = SlotScheduler(
+            n_slots, max_queue=max_queue,
+            max_prompt_len=None if cfg.sliding_window else max_len)
         self.stats = ServeStats(n_slots=n_slots)
+
+        if verify_weights:
+            self.params, repairs = _guard.verify_packed_tree(
+                params, cfg=cfg, source_params=source_params)
+            if repairs and self.guard:
+                # clamped leaves decode degraded (bounded error) — say so
+                if any(mode == "clamp" for _, mode in repairs):
+                    self.guard.degrade()
 
         self.caches = init_caches(cfg, n_slots, max_len, per_slot=True)
         # host-side per-slot state
@@ -183,14 +234,42 @@ class ServeEngine:
 
         # donate the cache pool: decode updates it in place instead of
         # materializing a second copy every step (2x HBM otherwise; CPU
-        # ignores donation with a harmless warning)
-        self._step = jax.jit(
-            lambda p, b, c, i: decode_step(p, cfg, b, c, i),
-            donate_argnums=(2,))
-        self._prefill = jax.jit(
-            lambda p, b, c, i, l: _model.prefill_chunk(p, cfg, b, c, i, l),
-            donate_argnums=(2,))
+        # ignores donation with a harmless warning). With the guard on, the
+        # poison sentinels are traced into the same launch (per-slot
+        # reductions + debug callback; numerics untouched — the golden-token
+        # tests pin that).
+        mailbox = self.guard.mailbox if self.guard else None
+        nan_checks = bool(gcfg and gcfg.nan_checks)
+        kv_checks = bool(gcfg and gcfg.kv_checks)
+
+        def decode_fn(p, b, c, i):
+            logits, c2 = decode_step(p, cfg, b, c, i)
+            if nan_checks:
+                # decode rows always attend over >= 1 valid entry (the
+                # token just written), so no masking is needed
+                _guard.probe_logits(mailbox, logits[:, -1])
+            if kv_checks:
+                _guard.probe_kv(mailbox, c2, n_slots)
+            return logits, c2
+
+        def prefill_fn(p, b, c, i, l):
+            logits, c2 = _model.prefill_chunk(p, cfg, b, c, i, l)
+            if nan_checks:
+                # probe only the row each slot samples from; idle rows
+                # (l == 0) legitimately softmax over an all-masked window
+                rows = logits[jnp.arange(logits.shape[0]),
+                              jnp.maximum(l - 1, 0)]
+                _guard.probe_logits(mailbox, rows, lengths=l)
+            if kv_checks:
+                _guard.probe_kv(mailbox, c2, n_slots)
+            return logits, c2
+
+        self._sentinels_on = nan_checks or kv_checks
+        self._step = jax.jit(decode_fn, donate_argnums=(2,))
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
         self._reset = jax.jit(_reset_slot, donate_argnums=(0,))
+        self._scrub = jax.jit(lambda c, s: _reset_slot(c, s, scrub=True),
+                              donate_argnums=(0,))
 
         # quantization-health sweep of the packed weights: per-layer clip
         # rate / scale saturation / meta modes / re-encode drift gauges,
@@ -202,20 +281,63 @@ class ServeEngine:
     # -- request lifecycle -------------------------------------------------
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               eos_id: Optional[int] = None) -> Request:
-        """Queue a request; it is admitted when a slot frees up."""
-        if len(prompt) + max_new_tokens > self.max_len \
+               eos_id: Optional[int] = None,
+               ttl_steps: Optional[int] = None) -> Request:
+        """Queue a request; it is admitted when a slot frees up.
+
+        Raises ``ValueError`` on an invalid request (empty prompt,
+        non-positive ``max_new_tokens``, prompt over the cache page),
+        :class:`AdmissionError` when the queue is full (backpressure —
+        counted as shed), :class:`EngineFailedError` once the engine's
+        fault budget is exhausted."""
+        if self.guard:
+            self.guard.check_alive()
+        if prompt and len(prompt) + max_new_tokens > self.max_len \
                 and not self.cfg.sliding_window:
             raise ValueError(
                 f"prompt+generation {len(prompt)}+{max_new_tokens} exceeds "
                 f"cache capacity {self.max_len}")
-        return self.scheduler.submit(list(prompt), max_new_tokens, eos_id)
+        if ttl_steps is None:
+            ttl_steps = self.default_ttl_steps
+        try:
+            return self.scheduler.submit(
+                list(prompt), max_new_tokens, eos_id,
+                ttl_steps=ttl_steps, step=self.stats.steps)
+        except AdmissionError as e:
+            self.stats.shed += 1
+            if self.guard:
+                self.guard.record_shed(e.reason)
+            raise
 
     def _admit(self) -> None:
-        for req in self.scheduler.admit(self.stats.steps):
+        admitted = self.scheduler.admit(self.stats.steps)
+        for req in admitted:
             slot = req.slot
             self.caches = self._reset(self.caches, jnp.int32(slot))
             self._index[slot] = 0
+        if admitted and self.guard and self.guard.maybe_verify_admit():
+            self._spot_check_weights()
+
+    def _spot_check_weights(self) -> None:
+        """verify_on_admit sampling: validate one random packed leaf's
+        streams against its codec invariants; on damage, repair the whole
+        tree (re-quantize from source when available, else clamp)."""
+        from repro.core.codecs import PackedTensor, validate_packed
+        leaves = [l for l in jax.tree.leaves(
+            self.params, is_leaf=lambda x: isinstance(x, PackedTensor))
+            if isinstance(l, PackedTensor)]
+        if not leaves:
+            return
+        pick = int(self.guard._rng.integers(len(leaves)))
+        if not validate_packed(leaves[pick]):
+            return
+        if obs.enabled():
+            obs.counter("repro_guard_stream_invalid_total",
+                        "packed leaves failing codec stream validation"
+                        ).inc(stage="admit")
+        self.params, _ = _guard.verify_packed_tree(
+            self.params, cfg=self.cfg, source_params=self.source_params)
+        self.guard.degrade()
 
     # -- decode loop -------------------------------------------------------
 
@@ -259,11 +381,91 @@ class ServeEngine:
 
     def step(self) -> int:
         """Admit, plan per-slot chunks, run one batched launch, route
-        tokens. Returns the number of requests that finished this step."""
+        tokens. Returns the number of requests that finished this step.
+
+        Raises :class:`EngineFailedError` once the guard's fault budget is
+        exhausted (FAILED state — transient failures persisted past the
+        retry budget, or quarantines blew ``max_quarantines``)."""
+        if self.guard:
+            self.guard.check_alive()
         with obs.span("serve.step", step=self.stats.steps):
             return self._step_inner()
 
+    def _guarded_launch(self, fn, chunks) -> np.ndarray:
+        """Run a launch with the guard's transient-failure retry policy.
+        Only :class:`TransientStepError` is retried — it is raised *before*
+        the jitted call consumes its donated buffers, so re-running is
+        safe. Anything else propagates."""
+        if not self.guard:
+            return fn(chunks)
+        attempts = 0
+        while True:
+            try:
+                return fn(chunks)
+            except TransientStepError as e:
+                if attempts >= self.guard.cfg.max_step_retries:
+                    self.guard.fail(
+                        f"transient step failure persisted after "
+                        f"{attempts} retries: {e}")
+                    raise EngineFailedError(
+                        f"launch failed {attempts + 1} times "
+                        f"({e}); engine is FAILED") from e
+                self.guard.record_retry()
+                time.sleep(self.guard.cfg.retry_backoff_s * (2 ** attempts))
+                attempts += 1
+
+    def _expire_deadlines(self) -> None:
+        for req in self.scheduler.expire(self.stats.steps):
+            self.stats.expired += 1
+            where = ("running" if req.fail_reason == "deadline_running"
+                     else "queued")
+            if self.guard:
+                self.guard.record_expired(where)
+            obs.instant("serve.expire", rid=req.rid, where=where)
+
+    def _contain_faults(self, chunks, rows: np.ndarray) -> None:
+        """Poisoned-slot containment, between launch and token routing.
+
+        Unions the in-jit sentinel counts (drained via effects_barrier)
+        with a host-side non-finite scan of the sampled rows, then for
+        every flagged slot: quarantine its request (if occupied), scrub
+        its cache rows to init state, and mask it out of this step's
+        routing. The other slots' rows are untouched — their tokens stay
+        bit-identical to a fault-free run (batch-row independence)."""
+        faults = self.guard.drain() if self._sentinels_on else {}
+        poisoned = {}                              # slot -> first bad site
+        kv = faults.get("kv")
+        if kv is not None:
+            for slot in np.nonzero(np.asarray(kv))[0]:
+                poisoned[int(slot)] = "kv"
+        lg = faults.get("logits")
+        if lg is not None:
+            for slot in np.nonzero(np.asarray(lg))[0]:
+                if chunks.get(int(slot), 0) > 0:
+                    poisoned.setdefault(int(slot), "logits")
+        # host-side belt and braces (also covers guard configs that turned
+        # the in-jit probes off)
+        for slot in np.nonzero(~np.isfinite(rows).all(axis=-1))[0]:
+            if chunks.get(int(slot), 0) > 0:
+                poisoned.setdefault(int(slot), "logits")
+        for slot, site in sorted(poisoned.items()):
+            occupied = slot in self.scheduler.active
+            self.caches = self._scrub(self.caches, jnp.int32(slot))
+            self._index[slot] = 0
+            self._tokens[slot, 0] = 0
+            chunks[slot] = 0                       # no routing this step
+            if occupied:
+                req = self.scheduler.quarantine(
+                    slot, self.stats.steps, reason=site)
+                self.stats.quarantined += 1
+                self.guard.record_quarantine(site)
+                obs.instant("serve.quarantine", rid=req.rid, slot=slot,
+                            site=site)
+            else:
+                self.guard.record_scrub(site)
+
     def _step_inner(self) -> int:
+        self._expire_deadlines()
         with obs.span("serve.admit"):
             self._admit()
         if not self.scheduler.active:
@@ -276,11 +478,12 @@ class ServeEngine:
         t0 = time.perf_counter()
         with obs.span(f"serve.phase.{phase}",
                       slots=len(self.scheduler.active)):
-            if decode_only:
-                sampled_from = self._launch_decode(chunks)
-            else:
-                sampled_from = self._launch_prefill(chunks)
+            launch = self._launch_decode if decode_only \
+                else self._launch_prefill
+            sampled_from = self._guarded_launch(launch, chunks)
         dt = time.perf_counter() - t0
+        if self.guard:
+            self._contain_faults(chunks, sampled_from)
         with obs.span("serve.sample"):
             sampled = self.sample_fn(sampled_from)
 
@@ -324,6 +527,8 @@ class ServeEngine:
                 self.scheduler.evict(slot, self.stats.steps)
                 obs.instant("serve.evict", rid=req.rid)
                 finished += 1
+        if self.guard:
+            self.guard.note_step(dt)
         if obs.enabled():
             self._record_step_metrics(phase, dt, first_tokens,
                                       new_prefill, new_generated, finished)
@@ -382,6 +587,16 @@ class ServeEngine:
         return [r.output for r in reqs]
 
     # -- accounting --------------------------------------------------------
+
+    @property
+    def health(self) -> str:
+        """Current health state ('healthy' when the guard is off)."""
+        return self.guard.state if self.guard else _guard.HEALTHY
+
+    def guard_summary(self) -> dict:
+        """Fault-accounting snapshot (state, quarantines, retries, ...);
+        empty dict when the guard is off."""
+        return self.guard.summary() if self.guard else {}
 
     def mean_ttft_steps(self) -> float:
         """Mean steps from admission to first sampled token over every

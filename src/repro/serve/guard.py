@@ -1,0 +1,446 @@
+"""Serving-engine fault tolerance: health state machine + poison sentinels.
+
+A serving engine sharing one batched launch across many requests has a
+blast-radius problem: one poisoned slot — a NaN that crept into its logits,
+a corrupt byte in its packed KV page — must not take down the other
+``n_slots - 1`` requests riding the same jitted step. This module gives
+``ServeEngine`` the machinery to contain it:
+
+* **In-jit sentinels** (:func:`probe_logits`, :func:`probe_kv`) — tiny
+  per-slot reductions traced into the decode/prefill graphs (same pattern
+  as ``repro.obs.quant_health``: reductions inside jit, scalars shipped to
+  the host with ``jax.debug.callback``). ``probe_logits`` counts non-finite
+  values in each slot's sampled logit row; ``probe_kv`` counts non-finite
+  floats and illegal scale bytes (255: E8M0-reserved / e4m3 NaN — legal
+  pages hold [0, 254], 0 being the zero-init of empty pages) across each
+  slot's cache rows. Counts land in a :class:`SentinelMailbox` the engine
+  drains after each launch.
+
+* **A per-engine health state machine** (:class:`EngineGuard`) with three
+  states — HEALTHY, DEGRADED (faults observed and contained: quarantines,
+  watchdog trips, step retries; service continues), FAILED (fault budget
+  exhausted or an unrecoverable error; the engine refuses further steps) —
+  plus the fault-budget knobs of :class:`GuardConfig` and the
+  ``repro_guard_*`` metrics (gated by ``REPRO_OBS`` like every pillar).
+
+* **Packed-stream verification** (:func:`verify_packed_tree`) — codec
+  stream validation over a packed weight tree with graceful degradation:
+  re-quantize broken leaves from source weights when available (the
+  encoders are deterministic, so an intact leaf re-packs bit-identically),
+  else clamp scale bytes back into range (bounded error instead of inf),
+  else raise :class:`StreamIntegrityError`.
+
+Blast-radius containment relies on batch-row independence: every launch
+computes slot rows independently (pinned by the batched-vs-single parity
+tests), so evicting a poisoned slot leaves the survivors' tokens
+bit-identical to a fault-free run — which tests/test_faults.py asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro import obs
+
+__all__ = [
+    "HEALTHY", "DEGRADED", "FAILED", "HEALTH_LEVEL",
+    "TransientStepError", "EngineFailedError", "StreamIntegrityError",
+    "GuardConfig", "SentinelMailbox", "EngineGuard",
+    "probe_logits", "probe_kv", "verify_packed_tree",
+]
+
+HEALTHY, DEGRADED, FAILED = "healthy", "degraded", "failed"
+HEALTH_LEVEL = {HEALTHY: 0, DEGRADED: 1, FAILED: 2}
+
+# u8 scale byte that no encoder emits: E8M0 reserved/NaN (decodes to 2^128)
+# and the sign bit + NaN mantissa pattern of e4m3. Byte 0 is legal — it is
+# the zero-init of empty KV pages.
+_POISON_SCALE_BYTE = 255
+
+
+class TransientStepError(RuntimeError):
+    """A launch failed before touching device state (injected fault, host
+    hiccup) and is safe to retry: donated buffers were not consumed."""
+
+
+class EngineFailedError(RuntimeError):
+    """The engine's fault budget is exhausted (FAILED state); it refuses
+    further steps. Restart from a verified checkpoint."""
+
+
+class StreamIntegrityError(RuntimeError):
+    """Packed weight streams are corrupt and no repair path is available
+    (no source weights to re-quantize from, damage beyond scale clamping).
+    ``leaves`` maps leaf path -> problem list."""
+
+    def __init__(self, message: str, leaves: Optional[dict] = None):
+        super().__init__(message)
+        self.leaves = leaves or {}
+
+
+@dataclasses.dataclass
+class GuardConfig:
+    """Fault-tolerance knobs for :class:`EngineGuard`.
+
+    nan_checks / kv_checks : trace the logits / KV sentinels into the
+        jitted launches. Trace-time gates: with both off the launch graphs
+        are byte-identical to an unguarded engine.
+    watchdog_s : wall-clock budget per launch; a slower step trips the
+        watchdog and degrades the engine (None = no watchdog). Callers must
+        warm the jit caches first — compilation easily exceeds any sane
+        budget (benchmarks/serve_bench.py --chaos does).
+    max_step_retries : retries of a launch that raised
+        :class:`TransientStepError` before the engine gives up and FAILs.
+    retry_backoff_s : sleep before retry i is ``retry_backoff_s * 2**i``
+        (exponential backoff).
+    recovery_steps : consecutive clean steps after which a DEGRADED engine
+        returns to HEALTHY.
+    max_quarantines : quarantine budget; exceeding it FAILs the engine
+        (None = unlimited — quarantines degrade but never kill).
+    verify_on_admit : probability of running codec stream validation over
+        one admitted request's slot-independent weight tree sample (0.0 =
+        never; cheap spot check against in-HBM corruption).
+    seed : RNG seed for the admit-sampling coin flips (determinism).
+    """
+
+    nan_checks: bool = True
+    kv_checks: bool = True
+    watchdog_s: Optional[float] = None
+    max_step_retries: int = 2
+    retry_backoff_s: float = 0.05
+    recovery_steps: int = 3
+    max_quarantines: Optional[int] = None
+    verify_on_admit: float = 0.0
+    seed: int = 0
+
+
+class SentinelMailbox:
+    """Thread-safe accumulator between ``jax.debug.callback`` (which may
+    fire from a runtime thread, asynchronously) and the engine's host loop.
+    ``deliver`` adds a per-slot count vector for a site; ``drain`` returns
+    and clears {site: summed counts}."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counts: Dict[str, np.ndarray] = {}
+
+    def deliver(self, site: str, counts) -> None:
+        c = np.asarray(counts, np.int64).reshape(-1)
+        with self._lock:
+            prev = self._counts.get(site)
+            self._counts[site] = c if prev is None else prev + c
+
+    def drain(self) -> Dict[str, np.ndarray]:
+        with self._lock:
+            out, self._counts = self._counts, {}
+        return out
+
+
+def probe_logits(mailbox: SentinelMailbox, logits, lengths=None) -> None:
+    """Trace a per-slot non-finite count over the logits each slot samples
+    from. Call INSIDE jit.
+
+    ``logits``: (B, V) — the row each slot's next token is sampled from.
+    ``lengths``: optional (B,) planned chunk lengths; rows planned 0 tokens
+    are masked out (an idle prefill row legitimately softmaxes over an
+    all-masked attention window and is allowed to be NaN — nothing samples
+    from it)."""
+    import jax
+    import jax.numpy as jnp
+    bad = jnp.sum(~jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+    if lengths is not None:
+        bad = jnp.where(lengths > 0, bad, 0)
+    jax.debug.callback(lambda c: mailbox.deliver("logits", c),
+                       bad.astype(jnp.int32))
+
+
+def probe_kv(mailbox: SentinelMailbox, caches, n_slots: int) -> None:
+    """Trace a per-slot poison count over the cache pool. Call INSIDE jit,
+    on the post-launch caches.
+
+    Flags, per slot (cache leaves are layer-stacked with the slot axis
+    second): non-finite values in float leaves (K/V pages, recurrent
+    state — ``pos`` tracks are integers and skipped) and the reserved
+    scale byte 255 in packed-KV u8 ``scales`` streams. All leaves sum into
+    one (B,) vector delivered to site ``"kv"``."""
+    import jax
+    import jax.numpy as jnp
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    total = jnp.zeros((n_slots,), jnp.int32)
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", "")) if path else ""
+        if leaf.ndim < 2:
+            continue
+        axes = tuple(a for a in range(leaf.ndim) if a != 1)
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            total = total + jnp.sum(
+                ~jnp.isfinite(leaf.astype(jnp.float32)), axis=axes
+            ).astype(jnp.int32)
+        elif leaf.dtype == jnp.uint8 and name == "scales":
+            total = total + jnp.sum(
+                leaf == _POISON_SCALE_BYTE, axis=axes).astype(jnp.int32)
+    jax.debug.callback(lambda c: mailbox.deliver("kv", c), total)
+
+
+class EngineGuard:
+    """Health state machine + fault accounting for one ``ServeEngine``.
+
+    The engine calls :meth:`drain` after every launch (barriers the
+    pending debug callbacks, empties the mailbox), records contained
+    faults through the ``record_*`` methods, and :meth:`note_step` at the
+    end of each step — which runs the watchdog and the DEGRADED->HEALTHY
+    recovery streak. All ``repro_guard_*`` metrics are gated by
+    ``REPRO_OBS`` (``obs.enabled()``) like every other pillar."""
+
+    def __init__(self, cfg: Optional[GuardConfig] = None):
+        self.cfg = cfg or GuardConfig()
+        self.state = HEALTHY
+        self.mailbox = SentinelMailbox()
+        self.quarantines = 0
+        self.scrubs = 0
+        self.retries = 0
+        self.watchdog_trips = 0
+        self.expired = 0
+        self.shed = 0
+        self.degraded_steps = 0
+        self.fail_reason = ""
+        self._streak = 0                   # consecutive clean steps
+        self._dirty_step = False           # fault recorded this step
+        self._rng = np.random.default_rng(self.cfg.seed)
+        self._set_state_gauge()
+
+    # -- state machine -----------------------------------------------------
+
+    def _set_state_gauge(self) -> None:
+        if obs.enabled():
+            obs.gauge("repro_guard_health_state",
+                      "engine health (0 healthy, 1 degraded, 2 failed)"
+                      ).set(HEALTH_LEVEL[self.state])
+
+    def _escalate(self, to: str) -> None:
+        if HEALTH_LEVEL[to] > HEALTH_LEVEL[self.state]:
+            self.state = to
+            self._set_state_gauge()
+
+    def degrade(self) -> None:
+        self._streak = 0
+        self._dirty_step = True
+        self._escalate(DEGRADED)
+
+    def fail(self, reason: str) -> None:
+        self.fail_reason = self.fail_reason or reason
+        self._escalate(FAILED)
+
+    def check_alive(self) -> None:
+        if self.state == FAILED:
+            raise EngineFailedError(
+                f"engine is FAILED ({self.fail_reason}); restart from a "
+                f"verified checkpoint (load_packed_checkpoint(..., "
+                f"verify=True))")
+
+    def note_step(self, dt: float) -> None:
+        """End-of-step bookkeeping: watchdog + recovery streak."""
+        if self.cfg.watchdog_s is not None and dt > self.cfg.watchdog_s:
+            self.watchdog_trips += 1
+            if obs.enabled():
+                obs.counter("repro_guard_watchdog_trips_total",
+                            "launches over the wall-clock budget").inc()
+            self.degrade()
+        if self.state == DEGRADED:
+            self.degraded_steps += 1
+            if obs.enabled():
+                obs.counter("repro_guard_degraded_steps_total",
+                            "steps served while DEGRADED").inc()
+            if self._dirty_step:
+                self._streak = 0
+            else:
+                self._streak += 1
+                if self._streak >= self.cfg.recovery_steps:
+                    self.state = HEALTHY
+                    self._streak = 0
+                    self._set_state_gauge()
+        self._dirty_step = False
+
+    # -- sentinel plumbing ---------------------------------------------------
+
+    def drain(self) -> Dict[str, np.ndarray]:
+        """Flush pending debug callbacks and return {site: per-slot poison
+        counts} observed since the last drain."""
+        import jax
+        jax.effects_barrier()
+        return self.mailbox.drain()
+
+    # -- fault accounting ----------------------------------------------------
+
+    def record_quarantine(self, site: str) -> None:
+        self.quarantines += 1
+        if obs.enabled():
+            obs.counter("repro_guard_quarantine_total",
+                        "requests evicted for poisoned state").inc(site=site)
+        self.degrade()
+        if self.cfg.max_quarantines is not None \
+                and self.quarantines > self.cfg.max_quarantines:
+            self.fail(f"quarantine budget exhausted "
+                      f"({self.quarantines} > {self.cfg.max_quarantines})")
+
+    def record_scrub(self, site: str) -> None:
+        """Poison observed in an *unoccupied* slot — scrubbed, nobody
+        evicted."""
+        self.scrubs += 1
+        if obs.enabled():
+            obs.counter("repro_guard_scrub_total",
+                        "idle-slot cache scrubs").inc(site=site)
+        self.degrade()
+
+    def record_retry(self) -> None:
+        self.retries += 1
+        if obs.enabled():
+            obs.counter("repro_guard_step_retries_total",
+                        "transient launch failures retried").inc()
+        self.degrade()
+
+    def record_expired(self, where: str, n: int = 1) -> None:
+        self.expired += n
+        if obs.enabled():
+            obs.counter("repro_guard_expired_total",
+                        "requests past their deadline").inc(n, where=where)
+
+    def record_shed(self, reason: str) -> None:
+        self.shed += 1
+        if obs.enabled():
+            obs.counter("repro_guard_shed_total",
+                        "requests rejected at admission").inc(reason=reason)
+
+    def maybe_verify_admit(self) -> bool:
+        """Seeded coin flip for the verify-on-admit spot check."""
+        p = self.cfg.verify_on_admit
+        return p > 0 and bool(self._rng.random() < p)
+
+    def summary(self) -> dict:
+        return {
+            "state": self.state,
+            "quarantines": self.quarantines,
+            "scrubs": self.scrubs,
+            "retries": self.retries,
+            "watchdog_trips": self.watchdog_trips,
+            "expired": self.expired,
+            "shed": self.shed,
+            "degraded_steps": self.degraded_steps,
+            "fail_reason": self.fail_reason,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Packed-stream verification with graceful degradation
+# ---------------------------------------------------------------------------
+
+def verify_packed_tree(packed, cfg=None, source_params=None,
+                       repair: bool = True):
+    """Codec stream validation over a packed weight tree, with repair.
+
+    Returns ``(tree, repairs)`` where ``repairs`` is a list of
+    ``(leaf path, mode)`` — empty when every stream was already intact (the
+    common case; then ``tree is packed``). Repair modes, best first:
+
+    ``requantize``
+        ``source_params`` (the dense tree) and ``cfg`` given: re-pack the
+        source and splice the fresh leaves over the broken ones. Encoders
+        are deterministic, so this is an exact restore.
+    ``clamp``
+        No source available but the damage is confined to u8 scale bytes:
+        clamp them into the codec's legal range. Values decode wrong by a
+        bounded factor instead of exploding to inf/NaN — degraded, not
+        poisoned.
+
+    Anything else raises :class:`StreamIntegrityError` naming the leaves.
+    Metrics: ``repro_guard_stream_invalid_total{stage="weights"}`` per bad
+    leaf, ``repro_guard_stream_repair_total{mode}`` per repair.
+    """
+    import jax
+    from repro.core.codecs import (PackedTensor, get_codec, validate_packed,
+                                   validate_packed_tree)
+
+    report = validate_packed_tree(packed)
+    if not report:
+        return packed, []
+    if obs.enabled():
+        obs.counter("repro_guard_stream_invalid_total",
+                    "packed leaves failing codec stream validation").inc(
+            len(report), stage="weights")
+    if not repair:
+        detail = "; ".join(f"{k}: {'; '.join(v)}"
+                           for k, v in sorted(report.items()))
+        raise StreamIntegrityError(
+            f"{len(report)} packed leaf(s) violate codec stream invariants "
+            f"and repair is disabled ({detail})", leaves=report)
+
+    is_packed = lambda x: isinstance(x, PackedTensor)  # noqa: E731
+
+    def _key(path):
+        return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+
+    fresh_by_key = {}
+    if source_params is not None and cfg is not None:
+        from repro.serve.prequant import prequantize_params
+        fresh = prequantize_params(source_params, cfg)
+        fresh_by_key = {_key(p): leaf for p, leaf in
+                        jax.tree_util.tree_flatten_with_path(
+                            fresh, is_leaf=is_packed)[0]}
+
+    repairs, unrepairable = [], {}
+    flat, tdef = jax.tree_util.tree_flatten_with_path(packed,
+                                                      is_leaf=is_packed)
+    leaves = []
+    for path, leaf in flat:
+        key = _key(path)
+        if key not in report:
+            leaves.append(leaf)
+            continue
+        if key in fresh_by_key:
+            leaves.append(fresh_by_key[key])
+            repairs.append((key, "requantize"))
+            continue
+        clamped = _clamp_scales(leaf, get_codec(leaf.codec))
+        if clamped is not None and not validate_packed(clamped):
+            leaves.append(clamped)
+            repairs.append((key, "clamp"))
+        else:
+            leaves.append(leaf)
+            unrepairable[key] = report[key]
+    if unrepairable:
+        detail = "; ".join(f"{k}: {'; '.join(v)}"
+                           for k, v in sorted(unrepairable.items()))
+        raise StreamIntegrityError(
+            f"{len(unrepairable)} packed leaf(s) are corrupt beyond scale "
+            f"clamping and no source weights were given to re-quantize "
+            f"from ({detail}); re-run prequantize_checkpoint",
+            leaves=unrepairable)
+    if obs.enabled():
+        for _, mode in repairs:
+            obs.counter("repro_guard_stream_repair_total",
+                        "packed-leaf repairs by mode").inc(mode=mode)
+    return jax.tree_util.tree_unflatten(tdef, leaves), repairs
+
+
+def _clamp_scales(p, codec):
+    """Clamp a packed tensor's u8 scale bytes into the codec's legal range;
+    None if the codec has no u8 scale stream to clamp."""
+    import jax.numpy as jnp
+    sc = p.streams.get("scales")
+    if sc is None or sc.dtype != jnp.uint8:
+        return None
+    if codec.scale_kind == "e8m0":
+        fixed = jnp.clip(sc, 1, 254)
+    elif codec.scale_kind == "e4m3":
+        # pull NaN patterns (x7F/xFF) down to the e4m3 max-normal x7E/xFE
+        nan = (sc & 0x7F) == 0x7F
+        fixed = jnp.where(nan, sc - 1, sc)
+    else:
+        return None
+    streams = dict(p.streams)
+    streams["scales"] = fixed
+    return type(p)(streams, p.shape, p.codec)

@@ -38,9 +38,12 @@ __all__ = [
 ]
 
 # v1 predates the codec registry and implies codec="m2xfp"; v2 records the
-# codec explicitly in the manifest.
+# codec explicitly in the manifest; v3 additionally carries a per-leaf
+# CRC-32 (written by repro.checkpoint for every save — the version bump
+# just marks that integrity metadata is guaranteed present). v1/v2
+# checkpoints still load; they simply restore unverified.
 _PACKED_TAG = "mx-packed"
-_PACKED_VERSION = 2
+_PACKED_VERSION = 3
 _LEGACY_TAG = "m2xfp-packed-v1"
 
 
@@ -80,10 +83,20 @@ def save_packed_checkpoint(ckpt_dir: str, packed: dict, cfg,
 
 def load_packed_checkpoint(ckpt_dir: str, cfg,
                            step: Optional[int] = None,
-                           shardings=None) -> Tuple[dict, dict]:
+                           shardings=None, verify: bool = True,
+                           validate_streams: bool = False) -> Tuple[dict, dict]:
     """Restore a packed tree. Returns (packed, manifest_extra); raises if
     the checkpoint was not written by ``save_packed_checkpoint`` or was
-    packed with a different codec than ``cfg.quant_format``."""
+    packed with a different codec than ``cfg.quant_format``.
+
+    ``verify``: per-leaf CRC-32 verification against the manifest (format
+    v3; older manifests restore unverified) — a flipped byte raises
+    :class:`repro.checkpoint.CheckpointCorruptError` naming the leaf.
+    ``validate_streams``: additionally run the codec's semantic stream
+    validation (E8M0 scale-byte range etc., ``repro.core.codecs
+    .validate_packed_tree``) on the restored tree and raise ``ValueError``
+    listing the offending leaves — catches corruption that happened
+    *before* the checkpoint was written and so passes CRC."""
     extra = read_manifest(ckpt_dir, step).get("extra", {})
     tag = extra.get("format")
     if tag == _LEGACY_TAG:
@@ -106,7 +119,19 @@ def load_packed_checkpoint(ckpt_dir: str, cfg,
             f"not interchangeable between codecs — load with a matching "
             f"config (dataclasses.replace(cfg, quant_format={codec!r})) "
             f"or re-run prequantize_checkpoint with this one")
-    return restore_state(ckpt_dir, packed_template(cfg), step, shardings)
+    packed, manifest_extra = restore_state(
+        ckpt_dir, packed_template(cfg), step, shardings, verify=verify)
+    if validate_streams:
+        from repro.core.codecs import validate_packed_tree
+        report = validate_packed_tree(packed)
+        if report:
+            detail = "; ".join(f"{k}: {'; '.join(v)}"
+                               for k, v in sorted(report.items()))
+            raise ValueError(
+                f"{ckpt_dir} restored but {len(report)} packed leaf(s) "
+                f"violate codec stream invariants ({detail}); re-run "
+                f"prequantize_checkpoint from source weights")
+    return packed, manifest_extra
 
 
 def prequantize_checkpoint(src_dir: str, dst_dir: str, cfg,

@@ -1,0 +1,6 @@
+# Deterministic fault injection for the serving stack — the harness behind
+# tests/test_faults.py and `benchmarks/serve_bench.py --chaos`.
+from .faults import (  # noqa: F401
+    FaultInjector, FaultPlan, chaos_plan, corrupt_checkpoint_leaf,
+    poison_kv_nan, poison_kv_scale, truncate_checkpoint,
+)

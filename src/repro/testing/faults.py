@@ -1,0 +1,307 @@
+"""Deterministic, seed-driven fault injection for the serving stack.
+
+Robustness claims need a harness that *produces* the faults they guard
+against, reproducibly. This module injects the four fault classes the
+engine's guard (``repro.serve.guard``) is built to contain:
+
+* **bit flips in packed streams** — :func:`poison_kv_scale` writes the
+  reserved scale byte 255 into one slot's packed-KV page (what a flipped
+  high bit does to a legal E8M0 byte); :func:`corrupt_checkpoint_leaf`
+  flips one bit of one array inside a written checkpoint (CRC-32 must
+  catch it on load and name the leaf).
+* **NaN activations** — a chosen slot's logit row is overwritten with NaN
+  after a launch (:class:`FaultInjector`), or a float KV page entry is
+  poisoned directly (:func:`poison_kv_nan`).
+* **truncated checkpoints** — :func:`truncate_checkpoint` cuts the npz
+  container short (restore must raise ``CheckpointCorruptError``, not
+  unpickle garbage).
+* **delayed / failed steps** — a launch sleeps past the watchdog budget,
+  or raises ``TransientStepError`` *before* invoking the jitted function
+  (critically: the engine's launches donate their cache buffers, so a
+  retryable fault must fire before the call consumes them — this harness
+  guarantees that, making the engine's retry path safe to exercise).
+
+Everything is keyed on the engine's step counter and a
+:class:`FaultPlan`; the same seed always yields the same fault schedule
+(:func:`chaos_plan`), so chaos runs are replayable and the survivor-token
+bit-exactness assertions in tests/test_faults.py are deterministic.
+
+Usage::
+
+    plan = chaos_plan(seed=7, n_slots=4, first_step=2, horizon=40)
+    with FaultInjector(eng, plan) as inj:
+        eng.run()
+    assert eng.health != "failed"
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.guard import TransientStepError
+
+__all__ = [
+    "FaultPlan", "FaultInjector", "chaos_plan",
+    "poison_kv_scale", "poison_kv_nan",
+    "corrupt_checkpoint_leaf", "truncate_checkpoint",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic fault schedule, keyed on the engine step counter
+    (``engine.stats.steps`` at launch time). Each entry fires exactly once
+    — a launch retried after a transient failure sees no new fault."""
+
+    seed: int = 0
+    nan_logit_steps: Tuple[Tuple[int, int], ...] = ()   # (step, slot)
+    kv_poison_steps: Tuple[Tuple[int, int], ...] = ()   # (step, slot)
+    fail_steps: Tuple[int, ...] = ()                    # TransientStepError
+    delay_steps: Tuple[Tuple[int, float], ...] = ()     # (step, seconds)
+
+    def describe(self) -> str:
+        return (f"FaultPlan(seed={self.seed}, "
+                f"nan_logits={list(self.nan_logit_steps)}, "
+                f"kv_poison={list(self.kv_poison_steps)}, "
+                f"fails={list(self.fail_steps)}, "
+                f"delays={list(self.delay_steps)})")
+
+
+def chaos_plan(seed: int, n_slots: int, first_step: int = 2,
+               horizon: int = 40, delay_s: float = 0.0) -> FaultPlan:
+    """One representative fault of each class at seed-determined steps in
+    ``[first_step, first_step + horizon)`` — distinct steps, distinct
+    slots, so every containment path is exercised independently.
+    ``first_step`` must be past jit warmup when a watchdog is armed."""
+    rng = np.random.default_rng(seed)
+    steps = first_step + rng.choice(max(4, horizon), size=4, replace=False)
+    slots = rng.choice(n_slots, size=2, replace=n_slots < 2)
+    return FaultPlan(
+        seed=seed,
+        nan_logit_steps=((int(steps[0]), int(slots[0])),),
+        kv_poison_steps=((int(steps[1]), int(slots[1])),),
+        fail_steps=(int(steps[2]),),
+        delay_steps=(((int(steps[3]), delay_s),) if delay_s > 0 else ()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache poisoning (host-side, functional: returns a new cache tree)
+# ---------------------------------------------------------------------------
+
+def _leaf_items(tree):
+    import jax
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], tdef
+
+
+def _replace_leaf(tree, pick_fn, mutate_fn):
+    import jax
+    keys, leaves, tdef = _leaf_items(tree)
+    idx = pick_fn(keys, leaves)
+    if idx is None:
+        raise ValueError("no matching cache leaf to poison")
+    leaves = list(leaves)
+    leaves[idx] = mutate_fn(leaves[idx])
+    return jax.tree_util.tree_unflatten(tdef, leaves), keys[idx]
+
+
+def poison_kv_scale(caches, slot: int):
+    """Write the reserved byte 255 over one entry of the first packed-KV
+    u8 ``scales`` stream in ``slot``'s page (what a flipped high bit does
+    to a legal E8M0 byte ~128). Returns (poisoned caches, leaf path).
+    Requires a quantized-KV config (``cfg.kv_quant``)."""
+    import jax.numpy as jnp
+
+    def pick(keys, leaves):
+        for i, (k, l) in enumerate(zip(keys, leaves)):
+            if k.endswith("scales") and l.dtype == jnp.uint8 and l.ndim >= 2:
+                return i
+        return None
+
+    def mutate(leaf):
+        # last page position: not overwritten by the slot's next KV write
+        pos = leaf.shape[2] - 1 if leaf.ndim >= 3 else 0
+        at = (0, slot, pos)[:leaf.ndim] + (0,) * max(0, leaf.ndim - 3)
+        return leaf.at[at].set(255)
+
+    return _replace_leaf(caches, pick, mutate)
+
+
+def poison_kv_nan(caches, slot: int):
+    """NaN one entry of the first float K/V page (dense-KV configs) in
+    ``slot``'s row. Returns (poisoned caches, leaf path)."""
+    import jax.numpy as jnp
+
+    def pick(keys, leaves):
+        for i, (k, l) in enumerate(zip(keys, leaves)):
+            if jnp.issubdtype(l.dtype, jnp.floating) and l.ndim >= 3 \
+                    and not any(s in k for s in ("mlstm", "slstm", "mamba")):
+                return i
+        return None
+
+    def mutate(leaf):
+        pos = leaf.shape[2] - 1 if leaf.ndim >= 3 else 0
+        at = (0, slot, pos)[:leaf.ndim] + (0,) * max(0, leaf.ndim - 3)
+        return leaf.at[at].set(jnp.nan)
+
+    return _replace_leaf(caches, pick, mutate)
+
+
+# ---------------------------------------------------------------------------
+# Launch interception
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Wraps a ``ServeEngine``'s jitted launches and fires the plan's
+    faults at their scheduled steps. Use as a context manager (restores
+    the original launches on exit)::
+
+        with FaultInjector(engine, plan) as inj:
+            engine.run()
+        inj.fired   # {(kind, step), ...} — what actually triggered
+
+    Fault semantics at a scheduled step:
+
+    ``fail``   raise :class:`TransientStepError` *before* the jitted call
+               (donated buffers untouched — retry-safe by construction).
+    ``delay``  sleep before the call (trips the engine watchdog).
+    ``kv``     poison the cache argument (scale byte 255 on quantized-KV
+               configs, NaN float on dense-KV) for the planned slot.
+    ``nan``    overwrite the planned slot's logit row with NaN after the
+               call returns.
+    """
+
+    def __init__(self, engine, plan: FaultPlan):
+        self.engine = engine
+        self.plan = plan
+        self.fired: set = set()
+        self._orig_step = None
+        self._orig_prefill = None
+
+    # -- plan lookup (fire-once) -------------------------------------------
+
+    def _take(self, kind: str, step: int):
+        table = {
+            "nan": dict(self.plan.nan_logit_steps),
+            "kv": dict(self.plan.kv_poison_steps),
+            "fail": {s: True for s in self.plan.fail_steps},
+            "delay": dict(self.plan.delay_steps),
+        }[kind]
+        if step in table and (kind, step) not in self.fired:
+            self.fired.add((kind, step))
+            return table[step]
+        return None
+
+    # -- wrappers ----------------------------------------------------------
+
+    def _pre(self, caches):
+        step = self.engine.stats.steps
+        delay = self._take("delay", step)
+        if delay is not None:
+            time.sleep(float(delay))
+        if self._take("fail", step) is not None:
+            raise TransientStepError(
+                f"injected transient failure at step {step} "
+                f"(seed {self.plan.seed})")
+        slot = self._take("kv", step)
+        if slot is not None:
+            try:
+                caches, _ = poison_kv_scale(caches, slot)
+            except ValueError:
+                caches, _ = poison_kv_nan(caches, slot)
+        return caches
+
+    def _post_logits(self, logits):
+        import jax.numpy as jnp
+        slot = self._take("nan", self.engine.stats.steps)
+        if slot is not None:
+            logits = logits.at[slot].set(jnp.nan)
+        return logits
+
+    def install(self) -> "FaultInjector":
+        eng = self.engine
+        if self._orig_step is not None:
+            return self
+        self._orig_step = eng._step
+        self._orig_prefill = eng._prefill
+
+        def step(p, b, c, i):
+            c = self._pre(c)
+            logits, c2 = self._orig_step(p, b, c, i)
+            return self._post_logits(logits), c2
+
+        def prefill(p, b, c, i, l):
+            c = self._pre(c)
+            logits, c2 = self._orig_prefill(p, b, c, i, l)
+            return self._post_logits(logits), c2
+
+        eng._step = step
+        eng._prefill = prefill
+        return self
+
+    def uninstall(self) -> None:
+        if self._orig_step is not None:
+            self.engine._step = self._orig_step
+            self.engine._prefill = self._orig_prefill
+            self._orig_step = self._orig_prefill = None
+
+    def __enter__(self) -> "FaultInjector":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# On-disk checkpoint corruption
+# ---------------------------------------------------------------------------
+
+def _ckpt_npz(ckpt_dir: str, step: Optional[int]) -> str:
+    from repro.checkpoint import latest_step
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    return os.path.join(ckpt_dir, f"step_{step:010d}", "arrays.npz")
+
+
+def corrupt_checkpoint_leaf(ckpt_dir: str, step: Optional[int] = None,
+                            leaf: Optional[str] = None,
+                            seed: int = 0) -> str:
+    """Flip one bit of one array inside a written checkpoint and re-write
+    the npz (container stays well-formed, so only the manifest CRC-32 can
+    catch it). ``leaf`` picks the manifest key to damage (seed-chosen
+    otherwise). Returns the damaged leaf's manifest key."""
+    path = _ckpt_npz(ckpt_dir, step)
+    with np.load(path) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    rng = np.random.default_rng(seed)
+    keys = sorted(arrays)
+    key = leaf.replace("/", "|") if leaf is not None \
+        else keys[rng.integers(len(keys))]
+    arr = arrays[key]
+    raw = bytearray(arr.tobytes())
+    if not raw:
+        raise ValueError(f"leaf {key!r} has no bytes to corrupt")
+    bit = int(rng.integers(8 * len(raw)))
+    raw[bit // 8] ^= 1 << (bit % 8)
+    arrays[key] = np.frombuffer(bytes(raw), dtype=arr.dtype
+                                ).reshape(arr.shape)
+    np.savez(path, **arrays)
+    return key.replace("|", "/")
+
+
+def truncate_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                        nbytes: int = 256) -> str:
+    """Truncate a checkpoint's npz container to ``nbytes`` (a crash or
+    full disk mid-copy). Returns the truncated file path."""
+    path = _ckpt_npz(ckpt_dir, step)
+    with open(path, "r+b") as f:
+        f.truncate(nbytes)
+    return path

@@ -1,0 +1,389 @@
+"""Fault-tolerance tests: checkpoint integrity (CRC-32, truncation),
+packed-stream validation/repair, poisoned-slot quarantine with survivor
+bit-exactness, deadlines, backpressure, transient-step retries, and the
+seeded chaos harness (repro.testing.faults). Injection tests carry the
+``chaos`` marker."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptError, leaf_crc32, restore_state, save_state,
+)
+from repro.core.codecs import (
+    PackedTensor, validate_packed, validate_packed_tree,
+)
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.serve import (
+    AdmissionError, EngineFailedError, GuardConfig, ServeEngine,
+    SlotScheduler, StreamIntegrityError, load_packed_checkpoint,
+    prequantize_params, save_packed_checkpoint, verify_packed_tree,
+)
+from repro.serve.guard import DEGRADED, FAILED, HEALTHY, EngineGuard
+from repro.testing import (
+    FaultInjector, FaultPlan, chaos_plan, corrupt_checkpoint_leaf,
+    truncate_checkpoint,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    base = dict(name="fault-test", family="dense", n_layers=2, d_model=64,
+                n_heads=2, n_kv_heads=1, d_ff=128, vocab_size=97,
+                remat=False, quant="serve", kv_quant="m2xfp")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def packed_model():
+    cfg = _cfg()
+    params = init_params(KEY, cfg)
+    return cfg, params, prequantize_params(params, cfg)
+
+
+def _prompts(n, length=6):
+    return [[(7 * i + j) % 97 for j in range(length)] for i in range(n)]
+
+
+def _run(packed, cfg, plan=None, n=4, tokens=8, **engine_kw):
+    eng = ServeEngine(packed, cfg, n_slots=4, max_len=32, prefill_chunk=4,
+                      **engine_kw)
+    reqs = [eng.submit(p, tokens) for p in _prompts(n)]
+    if plan is not None:
+        with FaultInjector(eng, plan):
+            eng.run()
+    else:
+        eng.run()
+    return eng, reqs
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity: CRC-32 + truncation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_checkpoint_crc_catches_bit_flip(tmp_path):
+    """One flipped bit anywhere in a checkpoint is caught on load, and the
+    error names the damaged leaf."""
+    state = {"w": np.arange(64, dtype=np.float32).reshape(8, 8),
+             "b": np.ones((8,), np.float32)}
+    save_state(str(tmp_path), 0, state)
+    bad = corrupt_checkpoint_leaf(str(tmp_path), seed=3)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        restore_state(str(tmp_path), state)
+    assert ei.value.leaf == bad
+    assert bad in str(ei.value) and "CRC-32" in str(ei.value)
+    # verification is opt-out for forensics
+    restored, _ = restore_state(str(tmp_path), state, verify=False)
+    assert not np.array_equal(np.asarray(restored[bad]), state[bad])
+
+
+@pytest.mark.chaos
+def test_checkpoint_truncation_actionable_error(tmp_path):
+    state = {"w": np.arange(4096, dtype=np.float32)}
+    save_state(str(tmp_path), 0, state)
+    truncate_checkpoint(str(tmp_path), nbytes=100)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        restore_state(str(tmp_path), state)
+    assert "restore an older step" in str(ei.value)
+
+
+def test_leaf_crc32_is_dtype_agnostic():
+    """bf16 leaves hash identically whether seen as bfloat16 or as the raw
+    void bytes the npz container stores."""
+    import ml_dtypes
+    a = np.arange(32, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    assert leaf_crc32(a) == leaf_crc32(a.view(np.dtype("V2")))
+
+
+@pytest.mark.chaos
+def test_packed_checkpoint_crc_on_load(packed_model, tmp_path):
+    """Acceptance: a flipped byte in a packed-weight checkpoint is caught
+    by load_packed_checkpoint, naming the leaf."""
+    cfg, _, packed = packed_model
+    save_packed_checkpoint(str(tmp_path), packed, cfg)
+    bad = corrupt_checkpoint_leaf(str(tmp_path), seed=11)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        load_packed_checkpoint(str(tmp_path), cfg)
+    assert ei.value.leaf == bad
+
+
+# ---------------------------------------------------------------------------
+# Packed-stream validation + graceful degradation
+# ---------------------------------------------------------------------------
+
+def _first_packed_index(tree):
+    leaves = jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, PackedTensor))
+    return next(i for i, l in enumerate(leaves)
+                if isinstance(l, PackedTensor))
+
+
+def _poison_scale_leaf(tree, byte):
+    """Return a copy of ``tree`` with one packed leaf's first scale byte
+    overwritten."""
+    is_p = lambda x: isinstance(x, PackedTensor)  # noqa: E731
+    flat, tdef = jax.tree_util.tree_flatten(tree, is_leaf=is_p)
+    i = _first_packed_index(tree)
+    p = flat[i]
+    streams = dict(p.streams)
+    flat_idx = (0,) * streams["scales"].ndim
+    streams["scales"] = streams["scales"].at[flat_idx].set(byte)
+    flat[i] = PackedTensor(streams, p.shape, p.codec)
+    return jax.tree_util.tree_unflatten(tdef, flat)
+
+
+def test_validate_packed_flags_illegal_scale_bytes(packed_model):
+    cfg, _, packed = packed_model
+    report = validate_packed_tree(packed)
+    assert report == {}, "freshly packed tree must validate clean"
+    for byte in (0, 255):
+        bad = _poison_scale_leaf(packed, byte)
+        report = validate_packed_tree(bad)
+        assert len(report) == 1
+        (leaf, problems), = report.items()
+        assert "scale byte" in problems[0]
+
+
+def test_verify_packed_tree_requantize_repair(packed_model):
+    """With source weights available, repair is an exact restore (the
+    encoders are deterministic)."""
+    cfg, params, packed = packed_model
+    bad = _poison_scale_leaf(packed, 255)
+    fixed, repairs = verify_packed_tree(bad, cfg=cfg, source_params=params)
+    assert repairs and all(m == "requantize" for _, m in repairs)
+    for a, b in zip(jax.tree.leaves(packed), jax.tree.leaves(fixed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_verify_packed_tree_clamp_fallback(packed_model):
+    """Without source weights, scale-byte damage degrades to a clamp —
+    decodable (finite) streams instead of inf, flagged as a repair."""
+    cfg, _, packed = packed_model
+    bad = _poison_scale_leaf(packed, 255)
+    fixed, repairs = verify_packed_tree(bad)
+    assert repairs and all(m == "clamp" for _, m in repairs)
+    assert validate_packed_tree(fixed) == {}
+    with pytest.raises(StreamIntegrityError):
+        verify_packed_tree(bad, repair=False)
+
+
+def test_verify_packed_tree_intact_is_identity(packed_model):
+    cfg, _, packed = packed_model
+    out, repairs = verify_packed_tree(packed)
+    assert out is packed and repairs == []
+
+
+# ---------------------------------------------------------------------------
+# Scheduler hardening: validation, backpressure, deadlines
+# ---------------------------------------------------------------------------
+
+def test_scheduler_submit_validation():
+    s = SlotScheduler(2, max_prompt_len=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        s.submit([], 4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        s.submit([1], 0)
+    with pytest.raises(ValueError, match="exceeds the cache page"):
+        s.submit(list(range(9)), 4)
+    with pytest.raises(ValueError, match="ttl_steps"):
+        s.submit([1], 4, ttl_steps=0)
+    s.check()
+
+
+def test_scheduler_backpressure_sheds_with_reason():
+    s = SlotScheduler(1, max_queue=2)
+    s.submit([1], 1)
+    s.submit([2], 1)
+    with pytest.raises(AdmissionError) as ei:
+        s.submit([3], 1)
+    assert ei.value.reason == "queue_full"
+    s.check()
+
+
+def test_scheduler_expire_queued_and_running():
+    s = SlotScheduler(1)
+    a = s.submit([1, 2], 4, ttl_steps=3, step=0)   # will run
+    b = s.submit([3], 4, ttl_steps=2, step=0)      # starves in queue
+    s.admit(step=0)
+    assert s.expire(1) == []
+    out = s.expire(2)                              # b's deadline
+    assert out == [b] and b.state == "expired"
+    assert b.fail_reason == "deadline_queued"
+    out = s.expire(3)                              # a's deadline, mid-run
+    assert out == [a] and a.state == "expired"
+    assert a.fail_reason == "deadline_running"
+    assert s.free == [0]
+    s.check()
+
+
+@pytest.mark.chaos
+def test_engine_backpressure_and_deadlines(packed_model):
+    """Bounded queue sheds; per-request deadlines evict both queued and
+    running requests; counters land in stats."""
+    cfg, _, packed = packed_model
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32, prefill_chunk=4,
+                      max_queue=4, default_ttl_steps=3)
+    reqs = [eng.submit(p, 8) for p in _prompts(4)]   # fills the queue
+    with pytest.raises(AdmissionError):
+        eng.submit([1, 2, 3], 8)
+    assert eng.stats.shed == 1
+    eng.run()
+    assert eng.stats.expired > 0
+    states = {r.state for r in reqs}
+    assert "expired" in states
+    assert eng.scheduler.expired and all(
+        r.fail_reason.startswith("deadline") for r in eng.scheduler.expired)
+    eng.scheduler.check()
+
+
+# ---------------------------------------------------------------------------
+# Poisoned-slot quarantine (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_quarantine_poisoned_slots_survivors_bit_identical(packed_model):
+    """Under a bit flip in one slot's packed KV stream plus a NaN in
+    another slot's logits, exactly those two requests are quarantined and
+    every survivor's tokens are bit-identical to the fault-free run."""
+    cfg, _, packed = packed_model
+    _, clean_reqs = _run(packed, cfg)
+    clean = [r.output for r in clean_reqs]
+
+    plan = FaultPlan(seed=1, kv_poison_steps=((3, 1),),
+                     nan_logit_steps=((4, 2),))
+    eng, reqs = _run(packed, cfg, plan=plan)
+    states = [r.state for r in reqs]
+    assert states[1] == "quarantined" and states[2] == "quarantined"
+    assert states[0] == "finished" and states[3] == "finished"
+    assert reqs[0].output == clean[0]
+    assert reqs[3].output == clean[3]
+    assert eng.stats.quarantined == 2
+    assert {r.fail_reason for r in eng.scheduler.quarantined} == \
+        {"kv", "logits"}
+    # containment worked: served through the faults, never FAILED
+    assert eng.health in (HEALTHY, DEGRADED)
+    eng.scheduler.check()
+
+
+@pytest.mark.chaos
+def test_quarantined_slot_is_reusable(packed_model):
+    """A scrubbed slot serves later requests correctly — no poison and no
+    stale state leaks to the next occupant. With every slot occupied, the
+    quarantined slot frees first, so the follow-up request lands on it."""
+    cfg, _, packed = packed_model
+    plan = FaultPlan(seed=2, kv_poison_steps=((3, 0),))
+    eng, reqs = _run(packed, cfg, plan=plan, n=4)
+    assert reqs[0].state == "quarantined"
+    # clean engine reference for the same prompt
+    _, ref = _run(packed, cfg, n=4)
+    out = eng.generate([_prompts(4)[0]], 8)
+    assert out[0] == ref[0].output
+    assert eng.stats.quarantined == 1            # no re-quarantine
+
+
+# ---------------------------------------------------------------------------
+# Transient failures, watchdog, health state machine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_transient_step_failure_retried(packed_model):
+    cfg, _, packed = packed_model
+    plan = FaultPlan(seed=3, fail_steps=(2,))
+    eng, reqs = _run(packed, cfg, plan=plan)
+    assert all(r.state == "finished" for r in reqs)
+    assert eng.guard.retries == 1
+    # clean reference: the retried run loses no tokens
+    _, ref = _run(packed, cfg)
+    assert [r.output for r in reqs] == [r.output for r in ref]
+
+
+@pytest.mark.chaos
+def test_persistent_failure_fails_engine(packed_model):
+    from repro.serve.guard import TransientStepError
+    cfg, _, packed = packed_model
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32,
+                      guard=GuardConfig(max_step_retries=1,
+                                        retry_backoff_s=0.0))
+    eng.submit(_prompts(1)[0], 4)
+
+    def always_fail(*a, **k):
+        raise TransientStepError("injected: persistent")
+
+    eng._step = always_fail
+    eng._prefill = always_fail
+    with pytest.raises(EngineFailedError):
+        eng.run()
+    assert eng.health == FAILED
+    with pytest.raises(EngineFailedError):       # refuses further work
+        eng.step()
+    with pytest.raises(EngineFailedError):
+        eng.submit([1], 1)
+
+
+def test_watchdog_and_recovery_state_machine():
+    """Unit-level: a slow step trips the watchdog into DEGRADED; the
+    configured streak of clean steps recovers to HEALTHY."""
+    g = EngineGuard(GuardConfig(watchdog_s=0.1, recovery_steps=2))
+    assert g.state == HEALTHY
+    g.note_step(0.5)                  # trip
+    assert g.state == DEGRADED and g.watchdog_trips == 1
+    g.note_step(0.01)
+    assert g.state == DEGRADED        # streak 1 of 2
+    g.note_step(0.01)
+    assert g.state == HEALTHY
+    assert g.degraded_steps == 3
+
+
+def test_quarantine_budget_exhaustion_fails():
+    g = EngineGuard(GuardConfig(max_quarantines=1))
+    g.record_quarantine("kv")
+    assert g.state == DEGRADED
+    g.record_quarantine("logits")
+    assert g.state == FAILED
+    with pytest.raises(EngineFailedError):
+        g.check_alive()
+
+
+def test_guard_off_is_available():
+    """guard=False builds an engine with no guard machinery at all."""
+    cfg = _cfg()
+    params = init_params(KEY, cfg)
+    packed = prequantize_params(params, cfg)
+    eng = ServeEngine(packed, cfg, n_slots=2, max_len=32, guard=False)
+    assert eng.guard is None and eng.health == HEALTHY
+    assert eng.guard_summary() == {}
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos: everything at once
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.fuzz
+def test_chaos_run_recovers(packed_model):
+    """A seeded chaos plan (KV bit flip + NaN logits + transient failure)
+    never FAILs the engine, and work still completes."""
+    cfg, _, packed = packed_model
+    plan = chaos_plan(seed=7, n_slots=4, first_step=2, horizon=12)
+    eng = ServeEngine(packed, cfg, n_slots=4, max_len=32, prefill_chunk=4)
+    reqs = [eng.submit(p, 6) for p in _prompts(8)]
+    with FaultInjector(eng, plan) as inj:
+        eng.run()
+    assert eng.health != FAILED
+    done = [r for r in reqs if r.state == "finished"]
+    assert len(done) > 0
+    assert len(done) + eng.stats.quarantined + eng.stats.expired == len(reqs)
+    assert inj.fired, "plan never fired — dead harness"
+    eng.scheduler.check()
+
+
+@pytest.mark.chaos
+def test_chaos_plan_is_deterministic():
+    assert chaos_plan(5, 4) == chaos_plan(5, 4)
+    assert chaos_plan(5, 4) != chaos_plan(6, 4)
