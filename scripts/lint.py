@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""Run reprolint over the repository.
+
+Usage:
+    python scripts/lint.py                  # lint default targets vs baseline
+    python scripts/lint.py --check-baseline # CI mode (also fails on stale)
+    python scripts/lint.py --update-baseline
+    python scripts/lint.py --list-rules
+    python scripts/lint.py --list-env       # REPRO_* flag registry (markdown)
+
+See docs/static-analysis.md for the rule catalogue and suppression syntax.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis.lint.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

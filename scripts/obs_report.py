@@ -24,6 +24,9 @@ import json
 import os
 import sys
 
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
 
 def load_metrics(path: str) -> dict:
     """Last record per (name, sorted labels) from an append-only JSONL."""
@@ -166,7 +169,8 @@ def main(argv=None) -> int:
                     help="clip-rate layers to show")
     args = ap.parse_args(argv)
 
-    d = args.directory or os.environ.get("REPRO_OBS_DIR")
+    from repro.core import envflags
+    d = args.directory or envflags.get_str("REPRO_OBS_DIR") or None
     metrics = args.metrics or (d and os.path.join(d, "metrics.jsonl"))
     trace = args.trace or (d and os.path.join(d, "trace.json"))
     if not metrics and not trace:

@@ -1,0 +1,40 @@
+"""reprolint: AST-based static analysis for this repo's own invariants.
+
+Generic linters can't know that a ``Codec`` needs a matched encode/decode
+pair, that a Pallas grid computed with plain floordiv drops its remainder
+tile, or that ``REPRO_*`` knobs must flow through the typed registry in
+``repro.core.envflags``. These rules encode exactly those contracts.
+
+Entry points: ``scripts/lint.py`` (CLI), :func:`lint_source` /
+:func:`lint_paths` (library), ``lint-baseline.json`` (accepted debt).
+"""
+from .core import (DEFAULT_TARGETS, RULES, ModuleContext, Rule, Violation,
+                   _load_builtin_rules, lint_file, lint_paths, lint_source,
+                   register_rule)
+from .baseline import (baseline_path, diff_against_baseline, load_baseline,
+                       save_baseline)
+from .report import render_json, render_summary, render_text, rule_counts
+from .cli import main
+
+_load_builtin_rules()    # populate RULES at import so the registry is whole
+
+__all__ = [
+    "DEFAULT_TARGETS",
+    "RULES",
+    "ModuleContext",
+    "Rule",
+    "Violation",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "register_rule",
+    "baseline_path",
+    "diff_against_baseline",
+    "load_baseline",
+    "save_baseline",
+    "render_json",
+    "render_summary",
+    "render_text",
+    "rule_counts",
+    "main",
+]

@@ -1,0 +1,334 @@
+"""jit-safety rules: donated-buffer reuse, undrained debug callbacks,
+host/tracer leaks inside traced code.
+
+These encode the hazards the serving engine actually hit while growing:
+
+* ``donated-reuse`` — a buffer passed at a ``donate_argnums`` position is
+  consumed by the launch; reading the stale reference afterwards is
+  undefined (XLA may have aliased the memory into the output). The rule
+  tracks ``f = jax.jit(fn, donate_argnums=...)`` bindings (including
+  ``self.attr = jax.jit(...)`` across the methods of a class) and flags
+  any later load of a donated argument that was not rebound first.
+* ``undrained-callback`` — ``jax.debug.callback`` side effects are
+  asynchronous; a module that registers them but never references
+  ``jax.effects_barrier`` can lose or reorder deliveries at shutdown /
+  checkpoint boundaries (the serve guard drains its mailbox behind a
+  barrier after every launch). Modules whose callbacks are drained by a
+  *different* module carry an inline suppression saying which one.
+* ``tracer-leak`` — ``.item()``, ``float()``/``int()``/``bool()`` of a
+  traced parameter, ``np.asarray``, or Python branching on a ``jnp.``
+  expression inside a jit-decorated function or a Pallas kernel body:
+  each either forces a blocking host sync or raises a TracerError at a
+  call site far from the mistake.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .core import ModuleContext, Rule, Violation, dotted_name, register_rule
+
+_JIT_NAMES = ("jax.jit", "jit")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """The static donate_argnums of a jax.jit(...) call, if present."""
+    if dotted_name(call.func) not in _JIT_NAMES:
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.append(e.value)
+            return tuple(out)
+    return None
+
+
+def _target_names(target) -> List[str]:
+    """Dotted names bound by an assignment target."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out = []
+        for e in target.elts:
+            out.extend(_target_names(e))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    name = dotted_name(target)
+    return [name] if name else []
+
+
+def _units(stmts) -> Iterator[Tuple[ast.AST, List[ast.AST]]]:
+    """Flatten a statement list into (header-node, expr-subtrees) units in
+    source order. Compound statements contribute a unit for their header
+    expressions, then recurse into their bodies; nested function/class
+    definitions are opaque (their bodies run later, under different
+    aliasing rules)."""
+    for s in stmts:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            continue
+        if isinstance(s, ast.If) or isinstance(s, ast.While):
+            yield s, [s.test]
+            yield from _units(s.body)
+            yield from _units(s.orelse)
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            yield s, [s.iter, s.target]
+            yield from _units(s.body)
+            yield from _units(s.orelse)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            yield s, [i.context_expr for i in s.items] + \
+                [i.optional_vars for i in s.items if i.optional_vars]
+            yield from _units(s.body)
+        elif isinstance(s, ast.Try):
+            yield from _units(s.body)
+            for h in s.handlers:
+                yield from _units(h.body)
+            yield from _units(s.orelse)
+            yield from _units(s.finalbody)
+        else:
+            yield s, [s]
+
+
+def _walk_exprs(subtrees) -> Iterator[ast.AST]:
+    for t in subtrees:
+        for node in ast.walk(t):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda, ast.ClassDef)):
+                continue
+            yield node
+
+
+@register_rule
+class DonatedReuseRule(Rule):
+    name = "donated-reuse"
+    description = ("use of a buffer after it was passed at a donated "
+                   "argument position of a jitted callable")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        # class-level map: "self.attr" -> donated positions, per ClassDef
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(ctx, node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_function(ctx, node, {})
+
+    def _check_class(self, ctx, cls) -> Iterator[Violation]:
+        donating: Dict[str, Tuple[int, ...]] = {}
+        for m in cls.body:
+            if not isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for node in ast.walk(m):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.value, ast.Call):
+                    tgt = dotted_name(node.targets[0])
+                    pos = _donate_positions(node.value)
+                    if tgt and tgt.startswith("self.") and pos:
+                        donating[tgt] = pos
+        for m in cls.body:
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_function(ctx, m, donating)
+
+    def _check_function(self, ctx, fn, inherited) -> Iterator[Violation]:
+        donating = dict(inherited)
+        # local bindings: f = jax.jit(..., donate_argnums=...)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.value, ast.Call):
+                tgt = dotted_name(node.targets[0])
+                pos = _donate_positions(node.value)
+                if tgt and pos:
+                    donating[tgt] = pos
+        if not donating:
+            return
+        dead: Dict[str, int] = {}       # name -> line it was donated on
+        for header, subtrees in _units(fn.body):
+            # 1. loads of dead names
+            for node in _walk_exprs(subtrees):
+                if not isinstance(node, (ast.Name, ast.Attribute)):
+                    continue
+                if not isinstance(getattr(node, "ctx", None), ast.Load):
+                    continue
+                name = dotted_name(node)
+                if name in dead:
+                    yield ctx.violation(
+                        self, node,
+                        f"'{name}' was donated to a jitted call (line "
+                        f"{dead[name]} donates it via donate_argnums) and "
+                        f"read again without being rebound; the buffer "
+                        f"may already be aliased into the output")
+                    del dead[name]       # report once per donation
+            # 2. consumptions
+            for node in _walk_exprs(subtrees):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = dotted_name(node.func)
+                pos = donating.get(callee) if callee else None
+                if pos is None and isinstance(node.func, ast.Call):
+                    pos = _donate_positions(node.func)   # jax.jit(f,...)(x)
+                if not pos:
+                    continue
+                for p in pos:
+                    if p < len(node.args):
+                        name = dotted_name(node.args[p])
+                        if name:
+                            dead[name] = node.lineno
+            # 3. rebindings resurrect
+            for node in _walk_exprs(subtrees):
+                bound: List[str] = []
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        bound.extend(_target_names(t))
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    bound.extend(_target_names(node.target))
+                elif isinstance(node, ast.NamedExpr):
+                    bound.extend(_target_names(node.target))
+                elif isinstance(node, ast.Delete):
+                    for t in node.targets:
+                        bound.extend(_target_names(t))
+                for name in bound:
+                    dead.pop(name, None)
+            if isinstance(header, (ast.For, ast.AsyncFor)):
+                for name in _target_names(header.target):
+                    dead.pop(name, None)
+
+
+@register_rule
+class UndrainedCallbackRule(Rule):
+    name = "undrained-callback"
+    description = ("jax.debug.callback registered in a module that never "
+                   "references jax.effects_barrier")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        callbacks = []
+        drained = False
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                if fn and fn.endswith("debug.callback"):
+                    callbacks.append(node)
+            if (isinstance(node, ast.Attribute)
+                    and node.attr == "effects_barrier") \
+                    or (isinstance(node, ast.Name)
+                        and node.id == "effects_barrier"):
+                drained = True
+        if drained:
+            return
+        for node in callbacks:
+            yield ctx.violation(
+                self, node,
+                "jax.debug.callback registered but this module never calls "
+                "jax.effects_barrier; drain deliveries behind a barrier, or "
+                "suppress naming the module that drains them")
+
+
+def _jit_decorated(fn) -> bool:
+    for d in fn.decorator_list:
+        if dotted_name(d) in _JIT_NAMES:
+            return True
+        if isinstance(d, ast.Call):
+            if dotted_name(d.func) in _JIT_NAMES:
+                return True
+            if dotted_name(d.func) in _PARTIAL_NAMES and d.args \
+                    and dotted_name(d.args[0]) in _JIT_NAMES:
+                return True
+    return False
+
+
+def _kernel_fn_names(tree) -> Set[str]:
+    """Names of functions passed (possibly via functools.partial) as the
+    first argument of a ``pallas_call``."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = dotted_name(node.func)
+        if not fn or not fn.endswith("pallas_call") or not node.args:
+            continue
+        arg0 = node.args[0]
+        if isinstance(arg0, ast.Name):
+            out.add(arg0.id)
+        elif isinstance(arg0, ast.Call) \
+                and dotted_name(arg0.func) in _PARTIAL_NAMES and arg0.args \
+                and isinstance(arg0.args[0], ast.Name):
+            out.add(arg0.args[0].id)
+    return out
+
+
+_NP_CONVERSIONS = ("np.asarray", "np.array", "numpy.asarray", "numpy.array")
+_TRACED_PREFIXES = ("jnp.", "jax.numpy.")
+
+
+@register_rule
+class TracerLeakRule(Rule):
+    name = "tracer-leak"
+    description = ("host sync / Python control flow on traced values "
+                   "inside jit or Pallas kernel bodies")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        kernel_names = _kernel_fn_names(ctx.tree)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not (_jit_decorated(fn) or fn.name in kernel_names):
+                continue
+            # positional parameters carry traced values; kw-only params are
+            # the static_argnames / functools.partial configuration channel
+            params = {a.arg for a in fn.args.args + fn.args.posonlyargs}
+            params.discard("self")
+            yield from self._check_body(ctx, fn, params)
+
+    def _check_body(self, ctx, fn, params) -> Iterator[Violation]:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = dotted_name(node.func)
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    yield ctx.violation(
+                        self, node,
+                        ".item() inside a traced function forces a "
+                        "blocking device->host sync (TracerError under "
+                        "jit); keep reductions on-device or move the read "
+                        "outside the traced scope")
+                elif callee in _NP_CONVERSIONS and node.args:
+                    yield ctx.violation(
+                        self, node,
+                        f"{callee}() materializes a traced value on the "
+                        f"host; use jnp inside traced code")
+                elif isinstance(node.func, ast.Name) \
+                        and node.func.id in ("float", "int", "bool") \
+                        and len(node.args) == 1 \
+                        and self._mentions(node.args[0], params):
+                    yield ctx.violation(
+                        self, node,
+                        f"{node.func.id}() of a traced argument raises "
+                        f"TracerError under jit; use jnp casts "
+                        f"(.astype) instead")
+            elif isinstance(node, (ast.If, ast.While)):
+                if self._has_traced_call(node.test):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield ctx.violation(
+                        self, node,
+                        f"Python `{kind}` on a jnp expression inside a "
+                        f"traced function branches on a tracer; use "
+                        f"jnp.where / lax.cond / pl.when")
+
+    @staticmethod
+    def _mentions(expr, params) -> bool:
+        return any(isinstance(n, ast.Name) and n.id in params
+                   for n in ast.walk(expr))
+
+    @staticmethod
+    def _has_traced_call(test) -> bool:
+        for n in ast.walk(test):
+            if isinstance(n, ast.Call):
+                fn = dotted_name(n.func)
+                if fn and fn.startswith(_TRACED_PREFIXES):
+                    return True
+        return False

@@ -1,0 +1,148 @@
+"""kernel-contract: Pallas launch invariants.
+
+Three hazards this repo has actually to guard against (docs/kernels.md):
+
+* **Accumulation width** — the fp4 dequant-GEMMs feed the MXU with bf16
+  operands; without ``preferred_element_type=jnp.float32`` the dot
+  accumulates in bf16 and the K-loop partial sums drift (the exactness
+  proofs in tests/test_kernels.py assume f32 accumulation). Every dot
+  inside a kernel body must request it.
+* **Explicit launch geometry** — ``pl.pallas_call`` without ``grid`` /
+  ``out_shape`` relies on defaults that change meaning across Pallas
+  versions; both must be spelled out.
+* **Grid remainders** — a grid entry computed with plain floordiv
+  (``m // bm``) silently *drops the remainder tile*: with m=130, bm=128
+  the tail 2 rows are never computed and the output is wrong without any
+  error. The enclosing function must guard divisibility (a ``%`` check
+  that raises/asserts), round up (``pl.cdiv`` / ``-(-m // bm)``), or pad
+  the operands before launch.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from .core import ModuleContext, Rule, Violation, dotted_name, register_rule
+from .rules_jax import _kernel_fn_names, _PARTIAL_NAMES
+
+_DOT_CALLS = ("dot_general", "dot")
+_DOT_PREFIXES = ("jnp.", "jax.numpy.", "lax.", "jax.lax.")
+
+
+def _is_dot(call: ast.Call) -> bool:
+    fn = dotted_name(call.func)
+    if not fn:
+        return False
+    head, _, tail = fn.rpartition(".")
+    return tail in _DOT_CALLS and (head + ".").startswith(_DOT_PREFIXES)
+
+
+def _f32_preferred(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "preferred_element_type":
+            name = dotted_name(kw.value)
+            return bool(name) and name.endswith("float32")
+    return False
+
+
+def _enclosing_functions(tree) -> List[ast.AST]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _floordiv_entries(grid_node) -> List[ast.AST]:
+    """Grid-tuple elements computed with a plain ``a // b``."""
+    if not isinstance(grid_node, (ast.Tuple, ast.List)):
+        return []
+    out = []
+    for e in grid_node.elts:
+        if isinstance(e, ast.BinOp) and isinstance(e.op, ast.FloorDiv):
+            # -(-m // bm) is ceil-div: the inner floordiv sits under a
+            # USub whose operand is another USub — detected by the caller
+            out.append(e)
+    return out
+
+
+def _has_remainder_guard(fn) -> bool:
+    """True when the function pads, ceil-divs, or checks divisibility."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func) or ""
+            if name.endswith("cdiv") or "pad" in name.rsplit(".", 1)[-1]:
+                return True
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = node.operand
+            if isinstance(v, ast.BinOp) and isinstance(v.op, ast.FloorDiv) \
+                    and isinstance(v.left, ast.UnaryOp) \
+                    and isinstance(v.left.op, ast.USub):
+                return True                      # -(-a // b)
+        if isinstance(node, (ast.Assert, ast.If)):
+            test = node.test
+            for sub in ast.walk(test):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+                    return True
+    return False
+
+
+@register_rule
+class KernelContractRule(Rule):
+    name = "kernel-contract"
+    description = ("Pallas kernels must accumulate fp4 matmuls in f32, "
+                   "declare launch geometry, and handle grid remainders")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        kernel_names = _kernel_fn_names(ctx.tree)
+        fns = _enclosing_functions(ctx.tree)
+        fn_by_name = {f.name: f for f in fns}
+
+        # 1. f32 accumulation inside kernel bodies
+        for name in sorted(kernel_names):
+            fn = fn_by_name.get(name)
+            if fn is None:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and _is_dot(node) \
+                        and not _f32_preferred(node):
+                    yield ctx.violation(
+                        self, node,
+                        f"dot in Pallas kernel body '{name}' without "
+                        f"preferred_element_type=jnp.float32; bf16 "
+                        f"accumulation drifts over the K loop")
+
+        # 2./3. launch geometry + grid remainders, per pallas_call site
+        for fn in fns:
+            calls = [n for n in ast.walk(fn)
+                     if isinstance(n, ast.Call)
+                     and (dotted_name(n.func) or "").endswith("pallas_call")]
+            if not calls:
+                continue
+            guarded = _has_remainder_guard(fn)
+            # local grid assignments: grid = (m // bm, ...)
+            grid_defs = {}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                    t = node.targets[0]
+                    if isinstance(t, ast.Name):
+                        grid_defs[t.id] = node.value
+            for call in calls:
+                kw = {k.arg: k.value for k in call.keywords if k.arg}
+                for req in ("grid", "out_shape"):
+                    if req not in kw:
+                        yield ctx.violation(
+                            self, call,
+                            f"pallas_call without explicit {req}=; spell "
+                            f"out the launch geometry")
+                grid = kw.get("grid")
+                if isinstance(grid, ast.Name):
+                    grid = grid_defs.get(grid.id)
+                if grid is None:
+                    continue
+                bad = _floordiv_entries(grid)
+                if bad and not guarded:
+                    yield ctx.violation(
+                        self, bad[0],
+                        "grid entry uses plain floordiv with no "
+                        "divisibility guard in the enclosing function; a "
+                        "non-dividing block silently drops the remainder "
+                        "tile — raise on misalignment, pad, or use "
+                        "pl.cdiv")

@@ -1,2 +1,6 @@
 """Assigned architecture configs (one module per arch) + registry."""
 from .registry import ARCHS, get_config, list_configs, smoke_config  # noqa: F401
+
+__all__ = [
+    "ARCHS", "get_config", "list_configs", "smoke_config",
+]

@@ -26,3 +26,18 @@ from .m2xfp import (  # noqa: F401
 )
 from .dse import STRATEGIES, Strategy, mxfp4_reference, run_strategy  # noqa: F401
 from .ebw import ebw, format_ebw  # noqa: F401
+
+__all__ = [
+    "FP4_E2M1", "FP4_MAG_VALUES", "FP6_E2M3", "FP6_MAG_VALUES", "FP8_E4M3",
+    "FloatSpec", "PackedM2XFP", "SCALE_RULES", "STRATEGIES", "Strategy",
+    "decode_act_m2xfp", "decode_weight_m2xfp", "e8m0_decode", "e8m0_encode",
+    "ebw", "elem_em_dequant_with_scale", "encode_act_m2xfp",
+    "encode_weight_m2xfp", "exp2int", "format_ebw", "fp4_code_to_value",
+    "fp4_value_to_code", "fp6_code_to_value", "fp6_value_to_code",
+    "group_reshape", "group_unreshape", "mxfp4_reference", "pack_meta2",
+    "pack_nibbles", "quantize_act_m2nvfp4", "quantize_act_m2xfp",
+    "quantize_fp4_fp16scale", "quantize_mxfp4", "quantize_nvfp4",
+    "quantize_smx4", "quantize_weight_m2nvfp4", "quantize_weight_m2xfp",
+    "round_to_grid", "run_strategy", "sg_em_dequant_with_scale",
+    "shared_scale_exponent", "unpack_meta2", "unpack_nibbles",
+]

@@ -1,0 +1,228 @@
+"""Typed registry for every ``REPRO_*`` environment flag.
+
+The repo's behavior knobs used to be ad-hoc ``os.environ.get`` calls
+scattered across models/, obs/, launch/ and the benches, each with its own
+parsing and error handling. This module is the single source of truth: a
+flag is *declared* once (name, type, default, docstring, optional choices/
+minimum) and *read* through the typed accessors — which re-read the
+environment on every call, so tests can monkeypatch ``os.environ`` freely
+and nothing is cached behind their back.
+
+The ``env-hygiene`` lint rule (``repro.analysis.lint``) enforces that no
+module outside this one reads a ``REPRO_*`` variable directly; *writing*
+flags (``os.environ.setdefault`` in launchers and benches, monkeypatching
+in tests) is deliberately left alone.
+
+``scripts/lint.py --list-env`` renders :func:`markdown_table` — the flag
+table embedded in docs/static-analysis.md.
+
+Parsing semantics (kept bit-compatible with the call sites this replaced):
+
+* ``bool``  — true iff the raw value is exactly ``"1"``; unset, empty or
+  anything else is false (the historical ``== "1"`` convention).
+* ``int``   — unset returns the default (which may be ``None`` for
+  optional flags); a non-integer or a value below ``minimum`` raises
+  ``ValueError`` with an actionable message (see :func:`env_int`).
+* ``str``   — unset returns the default; when ``choices`` is declared, any
+  other raw value (including ``""``) raises ``ValueError`` listing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Tuple
+
+__all__ = [
+    "EnvFlag", "declare", "defined_flags", "get", "get_bool", "get_int",
+    "get_str", "get_raw", "env_int", "markdown_table",
+]
+
+_KINDS = ("bool", "int", "str")
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvFlag:
+    """One declared environment flag (see module docstring for parsing)."""
+
+    name: str
+    kind: str                                # "bool" | "int" | "str"
+    default: Any
+    help: str
+    choices: Optional[Tuple[str, ...]] = None   # str flags only
+    minimum: Optional[int] = None               # int flags only
+
+
+_FLAGS: Dict[str, EnvFlag] = {}
+
+
+def declare(name: str, kind: str, default: Any, help: str, *,
+            choices: Optional[Tuple[str, ...]] = None,
+            minimum: Optional[int] = None) -> EnvFlag:
+    """Register a flag. Redeclaring with an identical spec is a no-op (so
+    modules may defensively re-declare); a conflicting spec is an error."""
+    if kind not in _KINDS:
+        raise ValueError(f"flag {name!r}: kind must be one of {_KINDS}, "
+                         f"got {kind!r}")
+    flag = EnvFlag(name, kind, default, help, choices=choices,
+                   minimum=minimum)
+    prev = _FLAGS.get(name)
+    if prev is not None and prev != flag:
+        raise ValueError(f"flag {name!r} already declared with a different "
+                         f"spec: {prev} vs {flag}")
+    _FLAGS[name] = flag
+    return flag
+
+
+def defined_flags() -> Tuple[EnvFlag, ...]:
+    """Every declared flag, sorted by name."""
+    return tuple(_FLAGS[n] for n in sorted(_FLAGS))
+
+
+def _flag(name: str) -> EnvFlag:
+    try:
+        return _FLAGS[name]
+    except KeyError:
+        raise KeyError(
+            f"environment flag {name!r} is not declared in "
+            f"repro.core.envflags; declared flags: "
+            f"{', '.join(sorted(_FLAGS)) or '(none)'}") from None
+
+
+def env_int(name: str, default: Optional[int],
+            minimum: Optional[int] = 1) -> Optional[int]:
+    """Ad-hoc integer env read with hard validation (usable for variables
+    that are not declared flags — e.g. one-off test knobs). A non-integer
+    or below-minimum value is a hard error: a zero or negative chunk/tile
+    would silently produce broken tiling (division by zero, empty scans)
+    far from the setting."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        v = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name}={raw!r}: not an integer (unset it for the default "
+            f"{default})") from None
+    if minimum is not None and v < minimum:
+        raise ValueError(
+            f"{name}={raw!r}: must be >= {minimum}; unset it for the "
+            f"default {default}")
+    return v
+
+
+def get(name: str) -> Any:
+    """Typed read of a declared flag (re-reads the environment each call)."""
+    flag = _flag(name)
+    if flag.kind == "bool":
+        return os.environ.get(name, "") == "1"
+    if flag.kind == "int":
+        return env_int(name, flag.default, flag.minimum)
+    raw = os.environ.get(name)
+    if raw is None:
+        return flag.default
+    if flag.choices is not None and raw not in flag.choices:
+        raise ValueError(
+            f"{name}={raw!r}: expected one of "
+            f"{', '.join(repr(c) for c in flag.choices)}")
+    return raw
+
+
+def get_raw(name: str) -> Optional[str]:
+    """Unparsed read of a declared flag (None when unset) — for call sites
+    with a bespoke grammar (e.g. the REPRO_OBS pillar list)."""
+    _flag(name)
+    return os.environ.get(name)
+
+
+def _kind_checked(name: str, kind: str) -> Any:
+    flag = _flag(name)
+    if flag.kind != kind:
+        raise TypeError(f"flag {name!r} is declared {flag.kind!r}, "
+                        f"not {kind!r}")
+    return get(name)
+
+
+def get_bool(name: str) -> bool:
+    return _kind_checked(name, "bool")
+
+
+def get_int(name: str) -> Optional[int]:
+    return _kind_checked(name, "int")
+
+
+def get_str(name: str) -> Optional[str]:
+    return _kind_checked(name, "str")
+
+
+def markdown_table() -> str:
+    """The declared flag surface as a markdown table (rendered by
+    ``scripts/lint.py --list-env`` and embedded in docs)."""
+    rows = ["| Flag | Type | Default | Description |",
+            "| --- | --- | --- | --- |"]
+    for f in defined_flags():
+        extra = ""
+        if f.choices:
+            extra = " One of: " + ", ".join(f"`{c}`" for c in f.choices) + "."
+        if f.minimum is not None and f.kind == "int":
+            extra += f" Minimum {f.minimum}."
+        default = "(unset)" if f.default in (None, "") else f"`{f.default}`"
+        help_text = " ".join(f.help.split())
+        rows.append(f"| `{f.name}` | {f.kind} | {default} | "
+                    f"{help_text}{extra} |")
+    return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# The repo's flag surface (one declaration per REPRO_* variable)
+# ---------------------------------------------------------------------------
+
+declare("REPRO_FAITHFUL_DOTS", "bool", False,
+        "Keep true bf16 GEMM operand widths in lowered HLO (what the TPU "
+        "MXU consumes and the roofline memory term assumes). Off by "
+        "default because the container's XLA CPU runtime cannot execute "
+        "bf16xbf16=f32 dot thunks; the dry-run sets it (it only "
+        "lowers+compiles).")
+declare("REPRO_BF16_TP_REDUCE", "bool", False,
+        "Emit bf16 dot outputs so GSPMD tensor-parallel partial-sum "
+        "all-reduces move half the bytes (standard production trade: bf16 "
+        "reduction of activations).")
+declare("REPRO_GATHER_PACKED", "bool", False,
+        "Constrain packed u8 weight streams to be replicated along the "
+        "weight-shard axis before decode, so GSPMD all-gathers packed "
+        "codes instead of 16-bit decoded weights (3.55x less wire "
+        "traffic for the serve path's FSDP gathers).")
+declare("REPRO_SERVE_KERNEL", "str", "auto",
+        "Serve-path GEMM dispatch: 'xla' forces the pure-XLA decode "
+        "mirror, 'pallas' prefers the codec's fused kernel (interpret "
+        "mode off-TPU), 'auto' picks Pallas on TPU and XLA elsewhere "
+        "(docs/kernels.md).",
+        choices=("auto", "pallas", "xla"))
+declare("REPRO_REMAT_POLICY", "str", "none",
+        "jax.checkpoint policy for remat'd transformer blocks: 'none' "
+        "saves only block inputs, 'dots' saves dot outputs, "
+        "'dots_no_batch' saves dots with no batch dims.",
+        choices=("none", "dots", "dots_no_batch"))
+declare("REPRO_ATTN_KV_CHUNK", "int", 512,
+        "KV-chunk length of the flash-style lax.scan in train/prefill "
+        "attention. Larger: fewer scan iterations, less carry re-traffic; "
+        "smaller: lower live memory.", minimum=1)
+declare("REPRO_ATTN_Q_TILE", "int", 1024,
+        "Query-tile length of train/prefill attention (pairs with "
+        "REPRO_ATTN_KV_CHUNK).", minimum=1)
+declare("REPRO_KV_QUANT", "str", "none",
+        "KV-cache codec for the dry-run's serve cells: 'none' or a "
+        "kv-capable codec name from repro.core.codecs (e.g. 'm2xfp').")
+declare("REPRO_MOE_GROUP", "int", None,
+        "Override moe_group_size for dry-run train cells (expert-group "
+        "size of the MoE dispatch).", minimum=1)
+declare("REPRO_RULES_JSON", "str", None,
+        "JSON object of logical-sharding rule overrides for the dry-run, "
+        "e.g. '{\"fsdp\": null, \"mlp\": [\"data\",\"model\"]}'.")
+declare("REPRO_OBS", "str", "",
+        "Observability master switch: unset/''/'0' all off, '1' every "
+        "pillar, or a comma list of pillars (metrics, trace, health) — "
+        "parsed by repro.obs.registry.")
+declare("REPRO_OBS_DIR", "str", "",
+        "When set, components that finish a unit of work drop "
+        "metrics.jsonl + trace.json snapshots there (repro.obs.autodump).")

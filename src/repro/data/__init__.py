@@ -1,3 +1,7 @@
 # Data substrate: deterministic synthetic LM streams + byte-corpus
 # tokenization, host-sharded with background prefetch.
 from .pipeline import DataConfig, SyntheticLM, ByteCorpus, Prefetcher  # noqa: F401
+
+__all__ = [
+    "ByteCorpus", "DataConfig", "Prefetcher", "SyntheticLM",
+]

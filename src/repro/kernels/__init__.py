@@ -9,3 +9,10 @@ from .ops import (  # noqa: F401
     m2xfp_matmul, m2xfp_qmatmul, m2xfp_quantize, mxfp4_matmul, on_tpu,
     pack_w_mxfp4, pack_w_sgem, pack_x_elem_em, serve_block_m,
 )
+
+__all__ = [
+    "GROUP", "N_SUB", "SUBGROUP", "interleave_pack", "interleave_unpack",
+    "m2xfp_matmul", "m2xfp_qmatmul", "m2xfp_quantize", "mxfp4_matmul",
+    "on_tpu", "pack_w_mxfp4", "pack_w_sgem", "pack_x_elem_em",
+    "serve_block_m",
+]

@@ -152,6 +152,11 @@ def m2xfp_matmul_kernel(
     m, k = x.shape
     n = w_codes.shape[1]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"m2xfp_matmul_kernel: blocks (bm={bm}, bn={bn}, bk={bk}) must "
+            f"divide dims (m={m}, n={n}, k={k}); the grid would silently "
+            f"drop the remainder tile — pad upstream (see ops._pad_rows)")
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
         functools.partial(_mm_w_kernel, bk=bk),
@@ -187,6 +192,11 @@ def m2xfp_qmatmul_kernel(
     m = x_codes.shape[1]
     n = w_codes.shape[1]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"m2xfp_qmatmul_kernel: blocks (bm={bm}, bn={bn}, bk={bk}) must "
+            f"divide dims (m={m}, n={n}, k={k}); the grid would silently "
+            f"drop the remainder tile — pad upstream (see ops._pad_rows)")
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
         functools.partial(_mm_qq_kernel, bk=bk),

@@ -81,6 +81,11 @@ def m2xfp_quantize_kernel(
 ):
     k, m = x_t.shape
     bm, bk = min(bm, m), min(bk, k)
+    if k % bk or m % bm:
+        raise ValueError(
+            f"m2xfp_quantize_kernel: blocks (bk={bk}, bm={bm}) must divide "
+            f"dims (k={k}, m={m}); the grid would silently drop the "
+            f"remainder tile — pad upstream (see ops._pad_rows)")
     grid = (k // bk, m // bm)
     return pl.pallas_call(
         functools.partial(_quantize_kernel, bk=bk),

@@ -49,6 +49,11 @@ def mxfp4_matmul_kernel(
     m, k = x.shape
     n = w_codes.shape[1]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"mxfp4_matmul_kernel: blocks (bm={bm}, bn={bn}, bk={bk}) must "
+            f"divide dims (m={m}, n={n}, k={k}); the grid would silently "
+            f"drop the remainder tile — pad upstream (see ops._pad_rows)")
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
         functools.partial(_mm_kernel, bk=bk),

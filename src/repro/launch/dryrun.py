@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.hlo import analyze_hlo
+from repro.core import envflags
 from repro.analysis.roofline import model_flops, roofline
 from repro.configs import ARCHS, get_config
 from repro.configs.shapes import SHAPES, applicable_shapes, input_specs
@@ -78,9 +79,9 @@ def build_lowered(arch: str, shape_name: str, mesh, quant_train: str = "none",
 
     if kind == "train":
         cfg = dataclasses.replace(base_cfg, quant=quant_train)
-        if os.environ.get("REPRO_MOE_GROUP"):
-            cfg = dataclasses.replace(
-                cfg, moe_group_size=int(os.environ["REPRO_MOE_GROUP"]))
+        moe_group = envflags.get_int("REPRO_MOE_GROUP")
+        if moe_group is not None:
+            cfg = dataclasses.replace(cfg, moe_group_size=moe_group)
         state_sds = jax.eval_shape(
             lambda: make_train_state(key, cfg))
         batch_sds = input_specs(cfg, shape_name)
@@ -98,7 +99,7 @@ def build_lowered(arch: str, shape_name: str, mesh, quant_train: str = "none",
     # REPRO_KV_QUANT=m2xfp additionally packs the KV cache (Sec. 6.4 lever)
     cfg = dataclasses.replace(
         base_cfg, quant="serve",
-        kv_quant=os.environ.get("REPRO_KV_QUANT", "none"))
+        kv_quant=envflags.get_str("REPRO_KV_QUANT"))
     params_sds = jax.eval_shape(lambda: init_params(key, cfg))
     packed_sds = jax.eval_shape(
         lambda p: pack_params_for_serving(p, cfg), params_sds)
@@ -142,7 +143,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rules = {"kv_seq": ("data", "model")}
     # perf-iteration lever: logical-rule overrides, e.g.
     # REPRO_RULES_JSON='{"fsdp": null, "mlp": ["data","model"]}'
-    env_rules = os.environ.get("REPRO_RULES_JSON")
+    env_rules = envflags.get_str("REPRO_RULES_JSON")
     if env_rules:
         overrides = {
             k: (tuple(v) if isinstance(v, list) else v)

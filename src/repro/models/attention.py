@@ -28,6 +28,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import envflags
 from repro.distributed.sharding import constrain
 from .layers import apply_rope, rms_norm, softcap
 from .numerics import einsum_f32acc
@@ -36,31 +37,15 @@ from .quant import init_linear, quantized_matmul
 NEG_INF = -2.0e38
 
 
-def _env_int(name, default, minimum=1):
-    """Positive-int env override. A non-integer or non-positive value is a
-    hard error — a zero or negative chunk/tile would silently produce
-    broken tiling (division by zero, empty scans) far from the setting."""
-    import os
-    raw = os.environ.get(name)
-    if raw is None:
-        return default
-    try:
-        v = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"{name}={raw!r}: not an integer (unset it for the default "
-            f"{default})") from None
-    if v < minimum:
-        raise ValueError(
-            f"{name}={raw!r}: must be >= {minimum}; unset it for the "
-            f"default {default}")
-    return v
-
+# Positive-int env override with hard validation — a zero or negative
+# chunk/tile would silently produce broken tiling far from the setting.
+# Kept under its historical name; the parsing lives in repro.core.envflags.
+from repro.core.envflags import env_int as _env_int  # noqa: E402
 
 # perf levers (§Perf): larger chunks -> fewer scan iterations -> less
 # carry/operand re-traffic; smaller -> lower live memory
-KV_CHUNK = _env_int("REPRO_ATTN_KV_CHUNK", 512)
-Q_TILE = _env_int("REPRO_ATTN_Q_TILE", 1024)
+KV_CHUNK = envflags.get_int("REPRO_ATTN_KV_CHUNK")
+Q_TILE = envflags.get_int("REPRO_ATTN_Q_TILE")
 
 
 def init_attention(key, cfg, dtype=jnp.bfloat16) -> dict:

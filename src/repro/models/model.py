@@ -179,8 +179,8 @@ def _logits(params, cfg, h):
 def _remat(fn, cfg):
     if not cfg.remat:
         return fn
-    import os
-    pol = os.environ.get("REPRO_REMAT_POLICY", "none")
+    from repro.core import envflags
+    pol = envflags.get_str("REPRO_REMAT_POLICY")
     policy = {
         "none": None,                       # save only block inputs
         "dots": jax.checkpoint_policies.checkpoint_dots,

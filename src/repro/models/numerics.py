@@ -9,16 +9,16 @@ widths (the memory-roofline term depends on them).
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
-__all__ = ["faithful_dots", "dot_f32acc", "einsum_f32acc"]
+from repro.core import envflags
+
+__all__ = ["faithful_dots", "bf16_tp_reduce", "dot_f32acc", "einsum_f32acc"]
 
 
 def faithful_dots() -> bool:
-    return (os.environ.get("REPRO_FAITHFUL_DOTS", "") == "1"
+    return (envflags.get_bool("REPRO_FAITHFUL_DOTS")
             or jax.default_backend() == "tpu")
 
 
@@ -26,7 +26,7 @@ def bf16_tp_reduce() -> bool:
     """Perf lever (EXPERIMENTS.md §Perf): emit bf16 dot outputs so the
     GSPMD tensor-parallel partial-sum all-reduces move half the bytes
     (standard production trade: bf16 reduction of activations)."""
-    return os.environ.get("REPRO_BF16_TP_REDUCE", "") == "1"
+    return envflags.get_bool("REPRO_BF16_TP_REDUCE")
 
 
 def dot_f32acc(x: jax.Array, w: jax.Array, dims) -> jax.Array:

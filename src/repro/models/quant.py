@@ -109,10 +109,10 @@ def decode_serving_weight(p: PackedTensor, dtype=None) -> jax.Array:
     replicated along the weight-shard ('fsdp') axis *before* decoding, so
     GSPMD all-gathers the packed codes instead of 16-bit decoded weights
     (3.55x less wire traffic for the serve path's FSDP gathers)."""
-    import os
+    from repro.core import envflags
     codec = get_codec(p.codec)
     tail_names = _tail_streams(p)
-    if os.environ.get("REPRO_GATHER_PACKED", "") == "1":
+    if envflags.get_bool("REPRO_GATHER_PACKED"):
         from repro.distributed.sharding import constrain
         streams = dict(p.streams)
         for name in tail_names:
@@ -159,14 +159,10 @@ def serve_matmul_backend() -> str:
     (``kernel_codecs()``) and a weight satisfying ``_pallas_tiles``;
     everything else falls back to the XLA mirror.
     """
-    import os
-    mode = os.environ.get("REPRO_SERVE_KERNEL", "auto")
+    from repro.core import envflags
+    mode = envflags.get_str("REPRO_SERVE_KERNEL")
     if mode in ("xla", "pallas"):
         return mode
-    if mode != "auto":
-        raise ValueError(
-            f"REPRO_SERVE_KERNEL={mode!r}: expected 'xla', 'pallas' or "
-            f"'auto'")
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 

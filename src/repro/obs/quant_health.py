@@ -117,7 +117,7 @@ def probe_act(x, site: str, codec: str = "m2xfp") -> None:
         hist = jnp.zeros((4,), jnp.int32)
     stats = (jnp.asarray(x.size), clipped, jnp.asarray(e.size),
              sat_lo, sat_hi, hist)
-    jax.debug.callback(partial(drain_stats, site, codec), stats)
+    jax.debug.callback(partial(drain_stats, site, codec), stats)  # reprolint: disable=undrained-callback -- drained by serve.guard.EngineGuard.drain (jax.effects_barrier) after every launch
 
 
 def probe_scaled(site: str, xs_over_s, e, meta_codes=None,
@@ -139,7 +139,7 @@ def probe_scaled(site: str, xs_over_s, e, meta_codes=None,
         hist = jnp.stack([jnp.sum(meta_codes == c) for c in range(4)])
     stats = (jnp.asarray(xs_over_s.size), clipped, jnp.asarray(e.size),
              sat_lo, sat_hi, hist)
-    jax.debug.callback(partial(drain_stats, site, codec), stats)
+    jax.debug.callback(partial(drain_stats, site, codec), stats)  # reprolint: disable=undrained-callback -- drained by serve.guard.EngineGuard.drain (jax.effects_barrier) after every launch
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,8 @@ import threading
 import time
 from typing import Dict, Iterable, Optional, Tuple
 
+from repro.core import envflags
+
 __all__ = [
     "PILLARS", "enabled", "obs_dir", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "registry", "counter", "gauge", "histogram",
@@ -64,7 +66,7 @@ def _modes(raw: str) -> frozenset:
 def enabled(pillar: str = "metrics") -> bool:
     """True when observability pillar ``pillar`` is on (env-driven, cheap
     enough to call on hot paths — one dict lookup when off)."""
-    raw = os.environ.get("REPRO_OBS", "")
+    raw = envflags.get_raw("REPRO_OBS") or ""
     if raw in ("", "0"):
         return False
     return pillar in _modes(raw)
@@ -72,7 +74,7 @@ def enabled(pillar: str = "metrics") -> bool:
 
 def obs_dir() -> Optional[str]:
     """Directory for metric/trace snapshots (``REPRO_OBS_DIR``), or None."""
-    return os.environ.get("REPRO_OBS_DIR") or None
+    return envflags.get_str("REPRO_OBS_DIR") or None
 
 
 def _label_key(labels: dict) -> Tuple[Tuple[str, str], ...]:

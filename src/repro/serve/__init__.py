@@ -15,3 +15,12 @@ from .prequant import (  # noqa: F401
 from .scheduler import (  # noqa: F401
     AdmissionError, Request, SlotScheduler,
 )
+
+__all__ = [
+    "AdmissionError", "DEGRADED", "EngineFailedError", "EngineGuard",
+    "FAILED", "GuardConfig", "HEALTHY", "Request", "ServeEngine",
+    "ServeStats", "SlotScheduler", "StreamIntegrityError",
+    "TransientStepError", "load_packed_checkpoint", "packed_template",
+    "prequantize_checkpoint", "prequantize_params", "save_packed_checkpoint",
+    "tree_nbytes", "verify_packed_tree",
+]

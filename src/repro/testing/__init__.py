@@ -4,3 +4,8 @@ from .faults import (  # noqa: F401
     FaultInjector, FaultPlan, chaos_plan, corrupt_checkpoint_leaf,
     poison_kv_nan, poison_kv_scale, truncate_checkpoint,
 )
+
+__all__ = [
+    "FaultInjector", "FaultPlan", "chaos_plan", "corrupt_checkpoint_leaf",
+    "poison_kv_nan", "poison_kv_scale", "truncate_checkpoint",
+]

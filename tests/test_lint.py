@@ -1,0 +1,552 @@
+"""reprolint: per-rule fixtures (hit / suppressed / clean), baseline
+round-trips, the CLI, and a meta-test that the live tree is clean modulo
+the committed baseline."""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (
+    RULES, Violation, baseline_path, diff_against_baseline, lint_paths,
+    lint_source, load_baseline, save_baseline,
+)
+from repro.analysis.lint.cli import main as lint_main
+from repro.analysis.lint.core import repo_root
+from repro.analysis.lint.report import (
+    render_json, render_summary, rule_counts,
+)
+from repro.core import envflags
+
+
+def _lint(src, relpath="src/repro/models/fixture.py", only=None):
+    return lint_source(textwrap.dedent(src), relpath, only=only)
+
+
+def _rules_hit(violations):
+    return {v.rule for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# framework basics
+# ---------------------------------------------------------------------------
+
+def test_all_expected_rules_registered():
+    expected = {
+        "env-hygiene", "donated-reuse", "undrained-callback", "tracer-leak",
+        "codec-contract", "kernel-contract", "bare-except",
+        "mutable-default", "missing-all",
+    }
+    assert expected <= set(RULES)
+
+
+def test_syntax_error_becomes_parse_error_violation():
+    vs = _lint("def broken(:\n")
+    assert [v.rule for v in vs] == ["parse-error"]
+
+
+def test_violation_format_and_ident():
+    v = Violation("some-rule", "a/b.py", 3, 7, "msg")
+    assert v.format() == "a/b.py:3:7: error: [some-rule] msg"
+    assert v.ident() == ("a/b.py", "some-rule", "msg")
+
+
+def test_file_level_suppression():
+    src = """\
+    # reprolint: disable-file=bare-except
+    try:
+        pass
+    except:
+        pass
+    """
+    assert _lint(src, only=["bare-except"]) == []
+
+
+# ---------------------------------------------------------------------------
+# env-hygiene
+# ---------------------------------------------------------------------------
+
+ENV_HIT = """\
+import os
+chunk = os.environ.get("REPRO_ATTN_KV_CHUNK", "512")
+"""
+
+
+def test_env_hygiene_hit():
+    assert _rules_hit(_lint(ENV_HIT)) == {"env-hygiene"}
+
+
+def test_env_hygiene_getenv_subscript_and_contains():
+    src = """\
+    import os
+    a = os.getenv("REPRO_X")
+    b = os.environ["REPRO_Y"]
+    c = "REPRO_Z" in os.environ
+    """
+    assert len(_lint(src, only=["env-hygiene"])) == 3
+
+
+def test_env_hygiene_allows_envflags_module_and_non_repro():
+    assert _lint(ENV_HIT, relpath="src/repro/core/envflags.py") == []
+    assert _lint('import os\nx = os.environ.get("PATH")\n',
+                 only=["env-hygiene"]) == []
+
+
+def test_env_hygiene_suppressed():
+    src = ('import os\n'
+           'x = os.environ.get("REPRO_X")'
+           '  # reprolint: disable=env-hygiene -- bootstrap before registry\n')
+    assert lint_source(src, "src/repro/models/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# donated-reuse
+# ---------------------------------------------------------------------------
+
+def test_donated_reuse_hit():
+    src = """\
+    import jax
+
+    def run(fn, state, x):
+        step = jax.jit(fn, donate_argnums=(0,))
+        out = step(state, x)
+        return out + state.mean()
+    """
+    vs = _lint(src, only=["donated-reuse"])
+    assert len(vs) == 1 and "state" in vs[0].message
+
+
+def test_donated_reuse_rebind_same_statement_is_clean():
+    src = """\
+    import jax
+
+    def run(fn, state, x):
+        step = jax.jit(fn, donate_argnums=(0,))
+        state = step(state, x)
+        return state
+    """
+    assert _lint(src, only=["donated-reuse"]) == []
+
+
+def test_donated_reuse_self_attr_across_methods():
+    src = """\
+    import jax
+
+    class Engine:
+        def __init__(self, fn):
+            self._step = jax.jit(fn, donate_argnums=(0,))
+
+        def bad(self, caches, tok):
+            out = self._step(caches, tok)
+            return out, caches
+    """
+    vs = _lint(src, only=["donated-reuse"])
+    assert len(vs) == 1 and "caches" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# undrained-callback
+# ---------------------------------------------------------------------------
+
+CB_HIT = """\
+import jax
+
+def probe(stats):
+    jax.debug.callback(print, stats)
+"""
+
+
+def test_undrained_callback_hit():
+    assert _rules_hit(_lint(CB_HIT)) == {"undrained-callback"}
+
+
+def test_undrained_callback_clean_with_barrier():
+    src = CB_HIT + "\n\ndef drain():\n    jax.effects_barrier()\n"
+    assert _lint(src, only=["undrained-callback"]) == []
+
+
+def test_undrained_callback_suppressed():
+    src = ("import jax\n\n"
+           "def probe(stats):\n"
+           "    jax.debug.callback(print, stats)"
+           "  # reprolint: disable=undrained-callback -- drained elsewhere\n")
+    assert lint_source(src, "src/repro/models/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# tracer-leak
+# ---------------------------------------------------------------------------
+
+def test_tracer_leak_float_and_item_in_jit():
+    src = """\
+    import jax
+
+    @jax.jit
+    def f(x):
+        lo = float(x)
+        hi = x.mean().item()
+        return lo + hi
+    """
+    assert len(_lint(src, only=["tracer-leak"])) == 2
+
+
+def test_tracer_leak_host_numpy_in_kernel_body():
+    src = """\
+    import numpy as np
+    from jax.experimental import pallas as pl
+
+    def _k(x_ref, o_ref):
+        o_ref[...] = np.asarray(x_ref[...])
+
+    def launch(x, grid, out_shape):
+        return pl.pallas_call(_k, grid=grid, out_shape=out_shape)(x)
+    """
+    vs = _lint(src, only=["tracer-leak"])
+    assert len(vs) == 1 and "np.asarray" in vs[0].message
+
+
+def test_tracer_leak_branch_on_traced_value():
+    src = """\
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x):
+        if jnp.any(x > 0):
+            return x
+        return -x
+    """
+    assert len(_lint(src, only=["tracer-leak"])) == 1
+
+
+def test_tracer_leak_kwonly_params_are_static():
+    src = """\
+    import jax
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("bm",))
+    def f(x, *, bm):
+        return x[: int(bm)]
+    """
+    assert _lint(src, only=["tracer-leak"]) == []
+
+
+def test_tracer_leak_not_flagged_outside_jit():
+    assert _lint("def f(x):\n    return float(x)\n",
+                 only=["tracer-leak"]) == []
+
+
+# ---------------------------------------------------------------------------
+# codec-contract
+# ---------------------------------------------------------------------------
+
+CODEC_CLEAN = """\
+from repro.core.codecs import Codec
+
+C = Codec(name="mxfp4", group=32, ebw=4.25,
+          fake_quant_weight=fqw, fake_quant_act=fqa)
+"""
+
+
+def test_codec_contract_clean():
+    assert _lint(CODEC_CLEAN, only=["codec-contract"]) == []
+
+
+def test_codec_contract_missing_required():
+    src = "C = Codec(name='x', group=32)\n"
+    vs = _lint(src, only=["codec-contract"])
+    assert len(vs) == 1 and "missing required" in vs[0].message
+
+
+def test_codec_contract_encode_without_decode():
+    src = ("C = Codec(name='x', group=32, ebw=4.25, fake_quant_weight=f,\n"
+           "          fake_quant_act=f, encode=enc,\n"
+           "          scale_kind='e8m0', scale_sat_bounds=(1, 254))\n")
+    vs = _lint(src, only=["codec-contract"])
+    assert any("encode given without decode" in v.message for v in vs)
+
+
+def test_codec_contract_ebw_mismatch():
+    src = ("C = Codec(name='x', group=32, ebw=4.5, fake_quant_weight=f,\n"
+           "          fake_quant_act=f)\n")
+    vs = _lint(src, only=["codec-contract"])
+    assert len(vs) == 1 and "4.25" in vs[0].message
+
+
+def test_codec_contract_ebw_with_meta():
+    src = ("C = Codec(name='x', group=32, ebw=4.5, has_meta=True,\n"
+           "          fake_quant_weight=f, fake_quant_act=f)\n")
+    assert _lint(src, only=["codec-contract"]) == []
+
+
+def test_codec_contract_packed_e8m0_needs_sat_bounds():
+    src = ("C = Codec(name='x', group=32, ebw=4.25, fake_quant_weight=f,\n"
+           "          fake_quant_act=f, encode=e, decode=d,\n"
+           "          scale_kind='e8m0')\n")
+    vs = _lint(src, only=["codec-contract"])
+    assert any("scale_sat_bounds" in v.message for v in vs)
+
+
+def test_codec_contract_bad_sat_bounds():
+    src = ("C = Codec(name='x', group=32, ebw=4.25, fake_quant_weight=f,\n"
+           "          fake_quant_act=f, encode=e, decode=d,\n"
+           "          scale_kind='e8m0', scale_sat_bounds=(0, 255))\n")
+    vs = _lint(src, only=["codec-contract"])
+    assert any("[1, 254]" in v.message for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# kernel-contract
+# ---------------------------------------------------------------------------
+
+KERNEL_GRID_HIT = """\
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def launch(x, kernel, bm=128):
+    m, n = x.shape
+    grid = (m // bm,)
+    return pl.pallas_call(
+        kernel, grid=grid,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32))(x)
+"""
+
+
+def test_kernel_contract_unguarded_floordiv_grid():
+    vs = _lint(KERNEL_GRID_HIT, only=["kernel-contract"])
+    assert len(vs) == 1 and "remainder" in vs[0].message
+
+
+def test_kernel_contract_modulo_raise_guards_grid():
+    src = KERNEL_GRID_HIT.replace(
+        "    grid = (m // bm,)",
+        "    if m % bm:\n        raise ValueError(m)\n    grid = (m // bm,)")
+    assert _lint(src, only=["kernel-contract"]) == []
+
+
+def test_kernel_contract_missing_geometry():
+    src = """\
+    from jax.experimental import pallas as pl
+
+    def launch(x, kernel):
+        return pl.pallas_call(kernel)(x)
+    """
+    vs = _lint(src, only=["kernel-contract"])
+    assert sorted("grid" in v.message for v in vs) == [False, True]
+    assert len(vs) == 2
+
+
+def test_kernel_contract_dot_needs_f32_accumulation():
+    src = """\
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def _k(x_ref, w_ref, o_ref):
+        o_ref[...] = jnp.dot(x_ref[...], w_ref[...])
+
+    def launch(x, w, grid, out_shape):
+        return pl.pallas_call(_k, grid=grid, out_shape=out_shape)(x, w)
+    """
+    vs = _lint(src, only=["kernel-contract"])
+    assert len(vs) == 1 and "preferred_element_type" in vs[0].message
+    fixed = src.replace(
+        "jnp.dot(x_ref[...], w_ref[...])",
+        "jnp.dot(x_ref[...], w_ref[...], "
+        "preferred_element_type=jnp.float32)")
+    assert _lint(fixed, only=["kernel-contract"]) == []
+
+
+# ---------------------------------------------------------------------------
+# hygiene rules
+# ---------------------------------------------------------------------------
+
+def test_bare_except_hit_and_typed_clean():
+    hit = "try:\n    pass\nexcept:\n    pass\n"
+    clean = "try:\n    pass\nexcept ValueError:\n    pass\n"
+    assert _rules_hit(_lint(hit)) == {"bare-except"}
+    assert _lint(clean, only=["bare-except"]) == []
+
+
+def test_mutable_default_hit_and_clean():
+    assert len(_lint("def f(x, acc=[]):\n    return acc\n",
+                     only=["mutable-default"])) == 1
+    assert len(_lint("def f(x, *, cfg=dict()):\n    return cfg\n",
+                     only=["mutable-default"])) == 1
+    assert _lint("def f(x, acc=None):\n    return acc or []\n",
+                 only=["mutable-default"]) == []
+
+
+def test_missing_all_only_fires_on_repro_package_init():
+    src = "from .mod import thing\n"
+    hit = _lint(src, relpath="src/repro/fake/__init__.py",
+                only=["missing-all"])
+    assert len(hit) == 1 and hit[0].severity == "warning"
+    assert _lint(src, relpath="src/other/__init__.py",
+                 only=["missing-all"]) == []
+    assert _lint(src + '\n__all__ = ["thing"]\n',
+                 relpath="src/repro/fake/__init__.py",
+                 only=["missing-all"]) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    vs = _lint(ENV_HIT + CB_HIT.replace("import jax\n", ""))
+    assert len(vs) == 2
+    bpath = str(tmp_path / "lint-baseline.json")
+    save_baseline(bpath, vs, justification="test fixture")
+    entries = load_baseline(bpath)
+    assert len(entries) == 2
+    assert all(e["justification"] == "test fixture" for e in entries)
+
+    new, stale = diff_against_baseline(vs, entries)
+    assert new == [] and stale == []
+
+    # fixing one violation leaves a stale entry
+    new, stale = diff_against_baseline(vs[:1], entries)
+    assert new == [] and len(stale) == 1
+
+    # a fresh violation is new even with a baseline present
+    extra = Violation("bare-except", "src/repro/x.py", 9, 1, "msg")
+    new, stale = diff_against_baseline(list(vs) + [extra], entries)
+    assert [v.rule for v in new] == ["bare-except"]
+
+
+def test_baseline_counts_absorb_repeats(tmp_path):
+    v = Violation("bare-except", "a.py", 1, 1, "m")
+    w = Violation("bare-except", "a.py", 5, 1, "m")   # same identity
+    bpath = str(tmp_path / "b.json")
+    save_baseline(bpath, [v, w])
+    entries = load_baseline(bpath)
+    assert entries[0]["count"] == 2
+    new, stale = diff_against_baseline([v, w], entries)
+    assert new == [] and stale == []
+    new, stale = diff_against_baseline([v], entries)
+    assert new == [] and len(stale) == 1
+
+
+def test_load_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(str(tmp_path / "nope.json")) == []
+
+
+def test_load_rejects_non_baseline_json(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("[1, 2, 3]")
+    with pytest.raises(ValueError):
+        load_baseline(str(p))
+
+
+# ---------------------------------------------------------------------------
+# reporters
+# ---------------------------------------------------------------------------
+
+def test_reporters():
+    vs = _lint(ENV_HIT)
+    assert rule_counts(vs) == {"env-hygiene": 1}
+    summary = render_summary(vs)
+    assert "env-hygiene" in summary and "1 violation" in summary
+    payload = json.loads(render_json(vs))
+    assert payload["counts"] == {"env-hygiene": 1}
+    assert payload["violations"][0]["rule"] == "env-hygiene"
+    assert "env-hygiene" in payload["rules"]
+    assert render_summary([]) == "reprolint: clean (0 violations)"
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exits_nonzero_on_violation(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("try:\n    pass\nexcept:\n    pass\n")
+    assert lint_main([str(bad), "--no-baseline"]) == 1
+    out = capsys.readouterr().out
+    assert "bare-except" in out
+
+
+def test_cli_clean_file_exits_zero(tmp_path, capsys):
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert lint_main([str(good), "--no-baseline"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_rule_filter_and_unknown_rule(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("try:\n    pass\nexcept:\n    pass\n")
+    assert lint_main([str(bad), "--no-baseline",
+                      "--rule", "env-hygiene"]) == 0
+    capsys.readouterr()
+    assert lint_main([str(bad), "--rule", "no-such-rule"]) == 2
+
+
+def test_cli_update_then_check_baseline(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("try:\n    pass\nexcept:\n    pass\n")
+    bpath = str(tmp_path / "baseline.json")
+    assert lint_main([str(bad), "--baseline", bpath,
+                      "--update-baseline"]) == 0
+    assert lint_main([str(bad), "--baseline", bpath]) == 0
+    # fix the file: the baseline entry goes stale; --check-baseline fails
+    bad.write_text("x = 1\n")
+    assert lint_main([str(bad), "--baseline", bpath]) == 0
+    capsys.readouterr()
+    assert lint_main([str(bad), "--baseline", bpath,
+                      "--check-baseline"]) == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_list_rules_and_env(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "kernel-contract" in out and "env-hygiene" in out
+    assert lint_main(["--list-env"]) == 0
+    out = capsys.readouterr().out
+    assert "REPRO_FAITHFUL_DOTS" in out and "| Flag |" in out
+
+
+# ---------------------------------------------------------------------------
+# envflags registry
+# ---------------------------------------------------------------------------
+
+def test_envflags_semantics(monkeypatch):
+    monkeypatch.delenv("REPRO_FAITHFUL_DOTS", raising=False)
+    assert envflags.get_bool("REPRO_FAITHFUL_DOTS") is False
+    monkeypatch.setenv("REPRO_FAITHFUL_DOTS", "1")
+    assert envflags.get_bool("REPRO_FAITHFUL_DOTS") is True
+    monkeypatch.setenv("REPRO_FAITHFUL_DOTS", "true")   # only "1" enables
+    assert envflags.get_bool("REPRO_FAITHFUL_DOTS") is False
+
+    monkeypatch.setenv("REPRO_ATTN_KV_CHUNK", "64")
+    assert envflags.get_int("REPRO_ATTN_KV_CHUNK") == 64
+    monkeypatch.setenv("REPRO_ATTN_KV_CHUNK", "zero")
+    with pytest.raises(ValueError, match="not an integer"):
+        envflags.get_int("REPRO_ATTN_KV_CHUNK")
+
+    monkeypatch.setenv("REPRO_SERVE_KERNEL", "warp")
+    with pytest.raises(ValueError, match="expected one of"):
+        envflags.get_str("REPRO_SERVE_KERNEL")
+
+
+def test_envflags_markdown_table_covers_registry():
+    table = envflags.markdown_table()
+    for flag in envflags.defined_flags():
+        assert flag.name in table
+
+
+# ---------------------------------------------------------------------------
+# meta: the live tree is clean modulo the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_live_tree_clean_modulo_baseline():
+    root = repo_root()
+    assert os.path.isdir(os.path.join(root, "src", "repro"))
+    violations = lint_paths(root=root)
+    entries = load_baseline(baseline_path(root))
+    assert len(entries) <= 5, "baseline must stay small and justified"
+    new, _ = diff_against_baseline(violations, entries)
+    assert new == [], "\n".join(v.format() for v in new)
